@@ -1,0 +1,118 @@
+"""Shared CNN task for the paper-table benchmarks: trains the ResNet-18-style
+and MobileNet-v2-style networks (im2col convs) on the synthetic 10-class
+image task and caches trained params; provides accuracy evaluation with
+optionally quantized/pruned weights."""
+from __future__ import annotations
+
+import pathlib
+import pickle
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import image_task
+from repro.models.cnn import (
+    cnn_loss, mobilenet_apply, mobilenet_init, resnet_apply, resnet_init,
+)
+from repro.optim import adamw, cosine_schedule
+
+CACHE = pathlib.Path("experiments/cnn_cache.pkl")
+R_WIDTHS = (32, 64, 128, 128)
+M_WIDTHS = (32, 64, 96, 128)
+IMG = 12
+
+
+def _train(apply_fn, params, x, y, steps=60, lr=5e-3):
+    opt = adamw(cosine_schedule(lr, 10, steps))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, i):
+        l, g = jax.value_and_grad(
+            lambda p: cnn_loss(apply_fn, p, x, y))(params)
+        params, state = opt.update(g, state, params, i)
+        return params, state, l
+
+    for i in range(steps):
+        params, state, _ = step(params, state, jnp.int32(i))
+    return params
+
+
+def accuracy(apply_fn, params, x, y) -> float:
+    logits = jax.jit(apply_fn)(params, x)
+    return float((np.asarray(logits).argmax(-1) == np.asarray(y)).mean())
+
+
+def get_task(force: bool = False) -> Dict:
+    """Returns dict with trained models + eval sets (cached on disk)."""
+    if CACHE.exists() and not force:
+        with open(CACHE, "rb") as f:
+            return pickle.load(f)
+    x_tr, y_tr = image_task(512, size=IMG, seed=0)
+    x_te, y_te = image_task(384, size=IMG, seed=99)
+    x_tr, y_tr = jnp.asarray(x_tr), jnp.asarray(y_tr)
+
+    r_apply = lambda p, im: resnet_apply(p, im, widths=R_WIDTHS)
+    m_apply = lambda p, im: mobilenet_apply(p, im, widths=M_WIDTHS)
+    r_params = _train(r_apply, resnet_init(jax.random.key(0), widths=R_WIDTHS),
+                      x_tr, y_tr)
+    m_params = _train(m_apply, mobilenet_init(jax.random.key(1), widths=M_WIDTHS),
+                      x_tr, y_tr)
+    out = {
+        "resnet": jax.tree.map(np.asarray, r_params),
+        "mobilenet": jax.tree.map(np.asarray, m_params),
+        "x_te": np.asarray(x_te), "y_te": np.asarray(y_te),
+        "acc": {
+            "resnet": accuracy(r_apply, r_params, jnp.asarray(x_te), y_te),
+            "mobilenet": accuracy(m_apply, m_params, jnp.asarray(x_te), y_te),
+        },
+    }
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    with open(CACHE, "wb") as f:
+        pickle.dump(out, f)
+    return out
+
+
+def apply_fns() -> Dict[str, Callable]:
+    return {
+        "resnet": lambda p, im: resnet_apply(p, im, widths=R_WIDTHS),
+        "mobilenet": lambda p, im: mobilenet_apply(p, im, widths=M_WIDTHS),
+    }
+
+
+def quantize_cnn_params(params, method="sme", n_bits=8, window=3,
+                        squeeze=0, prune_frac=0.0) -> Tuple[Dict, Dict]:
+    """Quantize every conv matrix; returns (new_params, stats).
+
+    ``prune_frac`` applies magnitude pruning first (the paper's
+    "SME + PIM-Prune" combination, Table II)."""
+    from repro.core import quantize, squeeze_out, dequant_squeezed
+    from repro.core.sparsity import per_plane_sparsity
+
+    stats = {"bit_sparsity": [], "weight_sparsity": [], "n_weights": 0}
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        leaf = np.asarray(tree)
+        if leaf.ndim != 2 or min(leaf.shape) < 8:
+            return tree
+        w = leaf.copy()
+        if prune_frac > 0:
+            thr = np.quantile(np.abs(w), prune_frac)
+            w[np.abs(w) < thr] = 0.0
+        q = quantize(w, method=method, n_bits=n_bits, window=window)
+        if squeeze:
+            sq = squeeze_out(q.codes, n_bits, squeeze)
+            mag = dequant_squeezed(sq)
+            wq = mag * q.signs * q.scale
+        else:
+            wq = q.dequantize()
+        stats["bit_sparsity"].append(float(per_plane_sparsity(q).mean()))
+        stats["weight_sparsity"].append(float((wq == 0).mean()))
+        stats["n_weights"] += wq.size
+        return jnp.asarray(wq, jnp.float32)
+
+    return walk(params), stats

@@ -1,0 +1,274 @@
+"""All paper-table/figure reproductions (Table II, Figs. 2/4/5, 7-12).
+
+Each ``bench_*`` function returns a list of CSV rows
+(name, value, context) and prints a small table; ``benchmarks.run`` times
+and aggregates them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    quantize, quant_mse, squeeze_out, sme_crossbar_count,
+    squeezed_crossbar_count, conventional_crossbar_count,
+    conventional_crossbar_total, sparse_cell_count,
+)
+from repro.core.sparsity import (
+    per_plane_sparsity, overall_bit_sparsity, nonempty_row_histogram,
+)
+from repro.hardware.reram_model import LayerMapping, ReRAMConfig, summarize
+from repro.models.cnn import conv_weight_matrices
+
+from benchmarks._cnn_task import (
+    accuracy, apply_fns, get_task, quantize_cnn_params,
+)
+
+Row = Tuple[str, float, str]
+
+
+def _conv_mats(task, net: str, min_cols: int = 0):
+    """min_cols=128 restricts to the layers a 128-wide crossbar targets —
+    the paper's CNNs (ResNet-50, MobileNet-v2) are >=128-channel almost
+    everywhere; narrow layers map conventionally (no slicing)."""
+    mats = conv_weight_matrices(task[net])
+    if min_cols:
+        mats = [(n, w) for n, w in mats if w.shape[1] >= min_cols]
+    return mats
+
+
+# ------------------------------------------------------------- Fig. 2 / 4 / 5
+def bench_fig2_bit_sparsity() -> List[Row]:
+    """Per-plane bit sparsity: INT8 vs PO2 vs SME (paper Fig. 2 + Fig. 4)."""
+    task = get_task()
+    rows: List[Row] = []
+    mats = _conv_mats(task, "resnet")
+    w = np.concatenate([m.ravel() for _, m in mats])[:200_000].reshape(-1, 100)
+    for method in ("int", "po2", "sme"):
+        q = quantize(w, method=method, n_bits=8, window=3)
+        pps = per_plane_sparsity(q)
+        for i, s in enumerate(pps, 1):
+            rows.append((f"fig2/{method}/plane{i}_sparsity", round(float(s), 4),
+                         "resnet conv weights"))
+        rows.append((f"fig2/{method}/overall", round(float(pps.mean()), 4), ""))
+    # Fig. 5: non-empty rows in MSB crossbars
+    q = quantize(mats[2][1], "sme", 8, 3)
+    h = nonempty_row_histogram(q, plane=1)
+    rows.append(("fig5/msb_nonempty_row_frac", round(float(h["mean_fraction"]), 4),
+                 "small-CNN weights are less heavy-tailed than ImageNet"))
+    # ImageNet-trained nets are heavy-tailed (max >> typical): laplace ref
+    rng = np.random.default_rng(0)
+    wl = rng.laplace(0, 0.02, (512, 512)) * (1 + 9 * (rng.random((512, 512)) > 0.999))
+    ql = quantize(wl, "sme", 8, 3)
+    hl = nonempty_row_histogram(ql, plane=1)
+    rows.append(("fig5/msb_nonempty_row_frac_heavytail",
+                 round(float(hl["mean_fraction"]), 4),
+                 "paper: <10% on ResNet-18 MSB (heavy-tailed dist)"))
+    return rows
+
+
+# ----------------------------------------------------------------- Table II
+def bench_table2_accuracy_sparsity() -> List[Row]:
+    task = get_task()
+    fns = apply_fns()
+    x, y = jnp.asarray(task["x_te"]), task["y_te"]
+    rows: List[Row] = []
+    for net in ("resnet", "mobilenet"):
+        base_acc = task["acc"][net]
+        rows.append((f"table2/{net}/orig_acc", round(base_acc, 4), ""))
+        for label, kw in [
+            ("int8", dict(method="int")),
+            ("sme", dict(method="sme", squeeze=1)),
+            ("sme+prune", dict(method="sme", squeeze=1, prune_frac=0.5)),
+        ]:
+            qp, stats = quantize_cnn_params(task[net], **kw)
+            acc = accuracy(fns[net], qp, x, y)
+            rows.append((f"table2/{net}/{label}_acc", round(acc, 4),
+                         f"drop={base_acc - acc:+.4f}"))
+            rows.append((f"table2/{net}/{label}_bit_sparsity",
+                         round(float(np.mean(stats["bit_sparsity"])), 4), ""))
+            rows.append((f"table2/{net}/{label}_weight_sparsity",
+                         round(float(np.mean(stats["weight_sparsity"])), 4), ""))
+    return rows
+
+
+# -------------------------------------------------------------------- Fig. 7
+def _layer_mappings(mats, scheme: str, n_bits=8, squeeze=0,
+                    cell_bits=1) -> List[LayerMapping]:
+    out = []
+    for name, w in mats:
+        q = quantize(w, "sme" if scheme != "isaac" else "int", n_bits, 3)
+        if scheme == "isaac":
+            xbars = conventional_crossbar_total(w.shape, n_bits,
+                                                cell_bits=cell_bits)
+            index = 0
+        elif scheme == "sme":
+            xbars = sme_crossbar_count(q.codes, n_bits, cell_bits=cell_bits)
+            nr = -(-w.shape[0] // 128) * -(-w.shape[1] // 128)
+            index = (nr * n_bits) // 8 + 1          # occupancy bitmap
+        else:  # sme+squeeze
+            sq = squeeze_out(q.codes, n_bits, squeeze or 1)
+            xbars = squeezed_crossbar_count(sq, cell_bits=cell_bits)
+            nr = -(-w.shape[0] // 128) * -(-w.shape[1] // 128)
+            index = (nr * n_bits) // 8 + nr * 128 * 2 // 8  # bitmap + RCM regs
+        out.append(LayerMapping(
+            name=name, crossbars=max(xbars, 1), input_bits=8 + (squeeze or 0),
+            activations=1, index_bytes=index,
+            edram_bytes=w.shape[0]))
+    return out
+
+
+def bench_fig7_efficiency() -> List[Row]:
+    task = get_task()
+    cfg = ReRAMConfig()
+    rows: List[Row] = []
+    for net in ("resnet", "mobilenet"):
+        mats = _conv_mats(task, net, min_cols=128)
+        base = summarize(cfg, _layer_mappings(mats, "isaac"))
+        for scheme, kw in [("sme", {}), ("sme_squeeze", dict(squeeze=1))]:
+            s = summarize(cfg, _layer_mappings(mats, "sme" if scheme == "sme"
+                                               else "squeeze", **kw))
+            rows.append((f"fig7/{net}/{scheme}/energy_eff",
+                         round(base["energy_nj"] / s["energy_nj"], 3),
+                         "x vs ISAAC"))
+            rows.append((f"fig7/{net}/{scheme}/area_eff",
+                         round(base["area_mm2"] / s["area_mm2"], 3),
+                         "x vs ISAAC"))
+            rows.append((f"fig7/{net}/{scheme}/crossbar_reduction",
+                         round(base["crossbars"] / s["crossbars"], 3), ""))
+    return rows
+
+
+# -------------------------------------------------------------------- Fig. 8
+def bench_fig8_squeeze() -> List[Row]:
+    task = get_task()
+    fns = apply_fns()
+    x, y = jnp.asarray(task["x_te"]), task["y_te"]
+    mats = _conv_mats(task, "resnet", min_cols=128)
+    rows: List[Row] = []
+    base = sum(conventional_crossbar_total(w.shape, 8) for _, w in mats)
+    rows.append(("fig8/int8_baseline_crossbars", base, ""))
+    for sq in (0, 1, 2, 3):
+        qp, _ = quantize_cnn_params(task["resnet"], method="sme", squeeze=sq)
+        acc = accuracy(fns["resnet"], qp, x, y)
+        xbars = 0
+        for _, w in mats:
+            q = quantize(w, "sme", 8, 3)
+            if sq:
+                xbars += squeezed_crossbar_count(squeeze_out(q.codes, 8, sq))
+            else:
+                xbars += sme_crossbar_count(q.codes, 8)
+        rows.append((f"fig8/squeeze{sq}/acc", round(acc, 4), ""))
+        rows.append((f"fig8/squeeze{sq}/crossbars", xbars,
+                     f"{base / max(xbars,1):.2f}x reduction"))
+    return rows
+
+
+# -------------------------------------------------------------------- Fig. 9
+def bench_fig9_sweetspot() -> List[Row]:
+    task = get_task()
+    mats = _conv_mats(task, "resnet")
+    w = np.concatenate([m.ravel() for _, m in mats])[:100_000].reshape(-1, 100)
+    rows: List[Row] = []
+    mses, sps = {}, {}
+    for S in range(1, 9):
+        q = quantize(w, "sme", 8, S)
+        mses[S] = quant_mse(w, q)
+        sps[S] = overall_bit_sparsity(q)
+        rows.append((f"fig9/S{S}/mse", float(f"{mses[S]:.3e}"), ""))
+        rows.append((f"fig9/S{S}/bit_sparsity", round(float(sps[S]), 4), ""))
+    # paper's argument: pick the smallest S whose *marginal* error reduction
+    # has collapsed (error "almost zero" by S+1) — the knee of the curve —
+    # so the remaining S maximizes sparsity.
+    rng_err = mses[1] - mses[8]
+    sweet = next(S for S in range(2, 8)
+                 if (mses[S] - mses[S + 1]) < 0.02 * rng_err)
+    rows.append(("fig9/sweet_spot_S", sweet, "paper: S=3"))
+    return rows
+
+
+# ------------------------------------------------------------------- Fig. 10
+def bench_fig10_overhead() -> List[Row]:
+    """Index/register storage: SME vs SRE vs PIM-Prune analytical models,
+    parameterized to reproduce the paper's reported overhead scale
+    (PIM-Prune ~4KB, SRE ~778KB on ResNet-50; SME ~2Kb add-on)."""
+    task = get_task()
+    rows: List[Row] = []
+    for net in ("resnet", "mobilenet"):
+        mats = _conv_mats(task, net)
+        n_xbars = sum(conventional_crossbar_total(w.shape, 8) for _, w in mats)
+        # PIM-Prune: 1-bit row mask per crossbar row + per-crossbar align entry
+        pim = n_xbars * 128 // 8 + n_xbars * 4
+        # SRE: per-OU (8x128) index of retained rows: 8 OUs/xbar x 128 x 9 bits
+        sre = n_xbars * 16 * 128 * 9 // 8
+        # SME: occupancy bitmap (1 bit per plane-tile) + 2-bit RCM per row
+        tiles = sum((-(-w.shape[0] // 128)) * (-(-w.shape[1] // 128))
+                    for _, w in mats)
+        sme = tiles * 8 // 8 + tiles * 128 * 2 // 8
+        rows.append((f"fig10/{net}/pimprune_bytes", pim, ""))
+        rows.append((f"fig10/{net}/sre_bytes", sre, ""))
+        rows.append((f"fig10/{net}/sme_bytes", sme,
+                     f"{(1 - sme / pim) * 100:.1f}% vs PIM-Prune, "
+                     f"{(1 - sme / sre) * 100:.1f}% vs SRE"))
+    return rows
+
+
+# ------------------------------------------------------------------- Fig. 11
+def bench_fig11_mixed_precision() -> List[Row]:
+    """Intra-layer mixed precision (per-filter widths 5-8 bits)."""
+    task = get_task()
+    mats = _conv_mats(task, "resnet", min_cols=128)
+    rng = np.random.default_rng(3)
+    rows: List[Row] = []
+    conv_total = sme_total = 0
+    for name, w in mats:
+        widths = rng.choice([5, 6, 7, 8], size=w.shape[1],
+                            p=[0.25, 0.3, 0.25, 0.2])
+        q = quantize(w, "sme", 8, 3)
+        # zero out bits below each filter's width (MSB-aligned codes)
+        codes = q.codes.copy()
+        for b in (5, 6, 7):
+            mask = widths == b
+            codes[:, mask] = (codes[:, mask] >> (8 - b)) << (8 - b)
+        # conventional: structural coupling forces max width (8) cells
+        conv_total += conventional_crossbar_total(w.shape, 8)
+        sme_total += sme_crossbar_count(codes, 8)
+    rows.append(("fig11/conventional_crossbars", conv_total, "max-width coupling"))
+    rows.append(("fig11/sme_crossbars", sme_total,
+                 f"saves {conv_total - sme_total}"))
+    return rows
+
+
+# ------------------------------------------------------------------- Fig. 12
+def bench_fig12_mlc() -> List[Row]:
+    task = get_task()
+    mats = _conv_mats(task, "resnet", min_cols=128)
+    rows: List[Row] = []
+    for cell_bits, label in ((1, "slc"), (2, "mlc2")):
+        conv = sme = zc = tc = 0
+        for _, w in mats:
+            q = quantize(w, "sme", 8, 3)
+            conv += conventional_crossbar_count(q.codes, 8, cell_bits=cell_bits)
+            sme += sme_crossbar_count(q.codes, 8, cell_bits=cell_bits)
+            z, t = sparse_cell_count(q.codes, 8, cell_bits=cell_bits)
+            zc += z
+            tc += t
+        rows.append((f"fig12/{label}/conventional_crossbars", conv, ""))
+        rows.append((f"fig12/{label}/sme_crossbars", sme,
+                     f"{(1 - sme / conv) * 100:.1f}% fewer"))
+        rows.append((f"fig12/{label}/sparse_cell_frac", round(zc / tc, 4), ""))
+    return rows
+
+
+ALL = [
+    bench_fig2_bit_sparsity,
+    bench_table2_accuracy_sparsity,
+    bench_fig7_efficiency,
+    bench_fig8_squeeze,
+    bench_fig9_sweetspot,
+    bench_fig10_overhead,
+    bench_fig11_mixed_precision,
+    bench_fig12_mlc,
+]

@@ -1,0 +1,35 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention: the first
+column is the metric name, the second the metric value (or wall-us where a
+timing), the third context/derivation.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_tables, kernel_bench, roofline
+
+    suites = paper_tables.ALL + kernel_bench.ALL + roofline.ALL
+    print("name,value,derived")
+    failures = 0
+    for fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            continue
+        for name, value, ctx in rows:
+            print(f"{name},{value},{ctx}")
+        print(f"_timing/{fn.__name__}_s,{time.time()-t0:.1f},wall")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

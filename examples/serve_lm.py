@@ -1,0 +1,13 @@
+"""Batched serving example with SME-compressed weights.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    subprocess.run([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "qwen1.5-0.5b", "--requests", "6", "--max-new", "10",
+        "--sme", "--squeeze", "1",
+    ], check=True)

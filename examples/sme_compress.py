@@ -1,0 +1,27 @@
+"""Compress representative layers of every assigned architecture with SME
+and report the storage/crossbar wins per arch.
+
+    PYTHONPATH=src python examples/sme_compress.py
+"""
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import sme_compress, conventional_crossbar_total
+
+rng = np.random.default_rng(0)
+print(f"{'arch':24s} {'layer':14s} {'shape':16s} {'bits/w':>7s} "
+      f"{'xbar reduction':>15s}")
+for name, cfg in sorted(ARCHS.items()):
+    shapes = {
+        "attn_qkv": (cfg.d_model, cfg.n_heads * cfg.hd),
+        "mlp_in": (cfg.d_model, cfg.d_ff or 2 * cfg.d_model),
+    }
+    for lname, (k, n) in shapes.items():
+        k, n = min(k, 4096), min(n, 4096)   # cap for example runtime
+        w = rng.normal(0, 0.03, (k, n))
+        smew = sme_compress(w, squeeze=1)
+        conv = conventional_crossbar_total((k, n), 8)
+        red = conv / max(smew.crossbars_used(), 1)
+        print(f"{name:24s} {lname:14s} {str((k, n)):16s} "
+              f"{smew.storage_bits_per_weight('bytecode'):7.2f} "
+              f"{red:14.2f}x")

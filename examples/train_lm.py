@@ -1,0 +1,22 @@
+"""End-to-end LM training example (driver also used at mesh scale).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Trains the qwen2-family smoke config on the synthetic Markov stream for a
+few hundred steps with the full substrate (prefetch, AdamW+cosine,
+checkpoint/resume, heartbeat, straggler watch). The full-size config runs
+through the identical `repro.launch.train` driver under the production
+mesh (see launch/dryrun.py for the shardings).
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    steps = "200"
+    if "--steps" in sys.argv:
+        steps = sys.argv[sys.argv.index("--steps") + 1]
+    subprocess.run([
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "qwen2-0.5b", "--steps", steps, "--batch", "8",
+        "--seq", "64", "--ckpt-dir", "/tmp/repro_ckpt", "--resume",
+    ], check=True)

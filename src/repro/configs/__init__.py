@@ -1,0 +1,32 @@
+"""Config registry: one module per assigned architecture (+ paper's own CNNs)."""
+from .base import ModelConfig, ShapeConfig, SHAPES, SMOKE_SHAPE, scale_down
+
+from . import (
+    gemma3_12b, qwen15_05b, qwen2_05b, phi4_mini, whisper_medium,
+    llava_next_34b, deepseek_v2_lite, mixtral_8x7b, jamba_v01, xlstm_13b,
+)
+
+ARCHS = {
+    "gemma3-12b": gemma3_12b.CONFIG,
+    "qwen1.5-0.5b": qwen15_05b.CONFIG,
+    "qwen2-0.5b": qwen2_05b.CONFIG,
+    "phi4-mini-3.8b": phi4_mini.CONFIG,
+    "whisper-medium": whisper_medium.CONFIG,
+    "llava-next-34b": llava_next_34b.CONFIG,
+    "deepseek-v2-lite-16b": deepseek_v2_lite.CONFIG,
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "jamba-v0.1-52b": jamba_v01.CONFIG,
+    "xlstm-1.3b": xlstm_13b.CONFIG,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return scale_down(ARCHS[name])
+
+
+def list_archs():
+    return sorted(ARCHS)

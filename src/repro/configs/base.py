@@ -1,0 +1,134 @@
+"""Config dataclasses: model architecture + benchmark input shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "scale_down"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # --- attention flavor ---
+    attn_type: str = "gqa"          # gqa | mla
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    swa_window: int = 0             # 0 = full attention (all layers)
+    # per-superblock layer layout; empty -> n_layers x single default slot
+    block_pattern: Tuple[str, ...] = ()   # entries: attn|attn_local|attn_global|mamba|mlstm|slstm
+    # --- MLA (deepseek) ---
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_dff: int = 0
+    moe_pattern: Tuple[int, ...] = ()     # per-slot: 1 = MoE MLP, 0 = dense MLP
+    first_dense_layers: int = 0           # leading non-scanned dense blocks (deepseek)
+    capacity_factor: float = 1.25
+    # --- SSM (mamba / xlstm) ---
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0                 # 0 -> decoder-only
+    frontend: str = ""                    # "" | audio_stub | vision_stub
+    n_frontend_tokens: int = 0            # patches/frames prepended (vlm) or src len (audio)
+    act: str = "swiglu"                   # swiglu | gelu
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"               # activation/compute dtype
+    # shapes this arch skips, with reasons (recorded in EXPERIMENTS.md)
+    skip_shapes: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.block_pattern or ("attn",)
+
+    @property
+    def n_super(self) -> int:
+        """Scan length over superblocks. ``n_layers`` counts decoder blocks
+        only for enc-dec models (the encoder depth is ``n_enc_layers``)."""
+        pat = self.pattern
+        body = self.n_layers - self.first_dense_layers
+        assert body % len(pat) == 0, (self.name, body, pat)
+        return body // len(pat)
+
+    def moe_for_slot(self, slot: int) -> bool:
+        if not self.n_experts:
+            return False
+        if not self.moe_pattern:
+            return True
+        return bool(self.moe_pattern[slot])
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        for s, reason in self.skip_shapes:
+            if s == shape_name:
+                return reason
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def scale_down(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    pat = cfg.pattern
+    n_layers = cfg.first_dense_layers + len(pat) + cfg.n_enc_layers
+    small = dict(
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        expert_dff=64 if cfg.expert_dff else 0,
+        kv_lora=32 if cfg.kv_lora else 0,
+        q_lora=0,
+        rope_head_dim=8 if cfg.attn_type == "mla" else cfg.rope_head_dim,
+        nope_head_dim=16 if cfg.attn_type == "mla" else cfg.nope_head_dim,
+        v_head_dim=16 if cfg.attn_type == "mla" else cfg.v_head_dim,
+        swa_window=min(cfg.swa_window, 8) if cfg.swa_window else 0,
+        ssm_state=min(cfg.ssm_state, 8),
+        n_frontend_tokens=8 if cfg.frontend else 0,
+        name=cfg.name + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,22 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434; MoE + MLA].
+
+27L d=2048, MLA kv_lora=512 (rope 64 / nope 128 / v 128 per head, 16H),
+first layer dense (d_ff=10944), 26 MoE layers: 64 routed experts top-6 +
+2 shared, expert d_ff=1408.  The assignment line's "160 routed" is the
+full V2 config; the primary spec "MoE 64e top-6" matches V2-Lite and is
+used (DESIGN.md §4).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=10944, vocab=102_400,
+    attn_type="mla", kv_lora=512, q_lora=0,
+    rope_head_dim=64, nope_head_dim=128, v_head_dim=128,
+    n_experts=64, top_k=6, n_shared_experts=2, expert_dff=1408,
+    first_dense_layers=1,
+    skip_shapes=(("long_500k",
+                  "full-attention (MLA): 524k-token decode has no "
+                  "sub-quadratic path (task rule)"),),
+)

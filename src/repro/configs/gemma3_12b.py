@@ -1,0 +1,17 @@
+"""gemma3-12b [hf:google/gemma-3-1b-pt family; dense, 5:1 local:global].
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144; sliding-window
+local layers (W=1024) with one global layer per 6 (5:1), 128k-class ctx.
+head_dim = 3840/16 = 240 per the assignment dims.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense",
+    n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8, head_dim=240,
+    d_ff=15360, vocab=262_144,
+    block_pattern=("attn_local",) * 5 + ("attn_global",),
+    swa_window=1024, rope_theta=1_000_000.0, act="gelu",
+    # long_500k runs: local layers are window-bounded; global layers use
+    # SP-sharded full KV (8 global layers only).
+)

@@ -1,0 +1,19 @@
+"""jamba-v0.1-52b [arXiv:2403.19887; hybrid Mamba+attention 1:7, MoE 16e].
+
+32L d=4096: superblocks of 8 (attn at slot 4, Mamba elsewhere); MoE
+(16 experts top-2, d_ff=14336) on every other layer. long_500k runs:
+Mamba state is O(1), the 4 attention layers use SP-sharded KV.
+"""
+from .base import ModelConfig
+
+_PAT = tuple("attn" if i == 4 else "mamba" for i in range(8))
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=65_536,
+    block_pattern=_PAT,
+    n_experts=16, top_k=2, expert_dff=14336,
+    moe_pattern=tuple(1 if i % 2 else 0 for i in range(8)),
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+)

@@ -1,0 +1,17 @@
+"""llava-next-34b [hf:llava-hf family; VLM, anyres vision STUB].
+
+60L d=7168 56H (GQA kv=8) d_ff=20480 vocab=64000 backbone; the vision
+tower is a stub: ``input_specs`` provides 576 precomputed patch embeddings
+prepended to the text tokens (anyres tiling collapsed into the stub).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=20480, vocab=64_000,
+    frontend="vision_stub", n_frontend_tokens=576,
+    skip_shapes=(("long_500k",
+                  "pure full-attention backbone: 524k-token decode has no "
+                  "sub-quadratic path (task rule)"),),
+)

@@ -1,0 +1,15 @@
+"""mixtral-8x7b [arXiv:2401.04088; MoE 8e top-2, sliding-window attn].
+
+32L d=4096 32H (GQA kv=8), 8 experts top-2 (expert d_ff=14336), SWA
+window 4096 on every layer -> long_500k runs with a window-bounded ring
+KV cache.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32_000,
+    block_pattern=("attn_local",), swa_window=4096,
+    n_experts=8, top_k=2, expert_dff=14336,
+)

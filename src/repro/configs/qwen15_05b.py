@@ -1,0 +1,11 @@
+"""qwen1.5-0.5b [hf:Qwen/Qwen1.5-0.5B; dense MHA + QKV bias]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=2816, vocab=151_936, qkv_bias=True, tie_embeddings=True,
+    skip_shapes=(("long_500k",
+                  "pure full-attention: 524k-token decode has no "
+                  "sub-quadratic path (task rule)"),),
+)

@@ -1,0 +1,17 @@
+"""whisper-medium [arXiv:2212.04356; audio enc-dec, conv frontend STUB].
+
+24 encoder + 24 decoder layers, d=1024, 16H MHA, d_ff=4096, vocab=51865.
+``input_specs`` provides precomputed frame embeddings (frontend stub per
+task spec). Shapes split seq_len as src = tgt = seq/2.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51_865, qkv_bias=True,
+    norm="layernorm", act="gelu", frontend="audio_stub",
+    skip_shapes=(("long_500k",
+                  "enc-dec full attention; decoder context << 500k by "
+                  "construction"),),
+)

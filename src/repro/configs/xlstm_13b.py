@@ -1,0 +1,16 @@
+"""xlstm-1.3b [arXiv:2405.04517; sLSTM + mLSTM blocks 1:7].
+
+48 blocks d=2048, 4 heads; mLSTM (matrix memory, chunkwise-parallel
+train path) with one sLSTM block per 8.  d_ff=0: expansion lives inside
+the blocks (mLSTM pf=2, sLSTM ffn pf=4/3).  long_500k runs: recurrent
+state decode, no KV growth.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50_304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    ssm_expand=2,
+)

@@ -1,0 +1,20 @@
+"""Core SME algorithm: quantization, bit-slicing, squeeze-out, mapping."""
+from .quant import (
+    QuantizedTensor, quantize, dequantize, quant_mse, code_value,
+    sme_quantize_mag, int_quantize_mag, po2_quantize_mag, apt_quantize_mag,
+    SUPPORTED_METHODS,
+)
+from .bitslice import (
+    bit_planes, planes_to_codes, tile_codes, untile_codes, pad_to_tiles,
+    TiledPlanes, slice_to_tiles, plane_occupancy, nonempty_rows_per_tile,
+)
+from .squeeze import SqueezeResult, squeeze_out, dequant_squeezed, squeeze_error_bound
+from .mapping import (
+    cells_per_weight, conventional_cell_matrix, conventional_crossbar_count,
+    conventional_crossbar_total, sme_crossbar_count, squeezed_crossbar_count,
+    sparse_cell_count,
+)
+from .sparsity import (
+    per_plane_sparsity, overall_bit_sparsity, nonempty_row_histogram, weight_sparsity,
+)
+from .sme import SMEWeight, sme_compress, sme_matmul_ref_np

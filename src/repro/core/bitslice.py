@@ -1,0 +1,119 @@
+"""Inter-crossbar bit-slicing (paper §III-B).
+
+A quantized weight matrix (codewords ``codes[K, N]``) is sliced into ``Nq``
+binary *bit-plane matrices*.  Each plane is partitioned into ``xw x xh``
+tiles; tile ``(i, j)`` of plane ``p`` maps onto one ReRAM crossbar
+``XB_{i,j}^p``.  The ``Nq`` crossbars holding the same ``(i, j)`` region form
+a *crossbar group*.  On TPU the tile is the unit of storage/DMA skipping
+(see DESIGN.md §2): an all-zero (tile, plane) is neither stored nor moved.
+
+Everything here is pure numpy and operates on the codeword convention from
+``core.quant``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "bit_planes",
+    "pad_to_tiles",
+    "tile_codes",
+    "untile_codes",
+    "TiledPlanes",
+    "slice_to_tiles",
+    "plane_occupancy",
+    "nonempty_rows_per_tile",
+]
+
+
+def bit_planes(codes: np.ndarray, n_bits: int) -> np.ndarray:
+    """codes[...] -> planes[Nq, ...]; plane p (0-indexed) is weight bit p+1 (MSB first)."""
+    shifts = np.arange(n_bits - 1, -1, -1, dtype=codes.dtype)
+    shifts = shifts.reshape((n_bits,) + (1,) * codes.ndim)
+    return ((codes[None, ...] >> shifts) & 1).astype(np.uint8)
+
+
+def planes_to_codes(planes: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`bit_planes`."""
+    n_bits = planes.shape[0]
+    dtype = np.uint8 if n_bits <= 8 else np.uint16
+    weights = (1 << np.arange(n_bits - 1, -1, -1, dtype=np.int64))
+    weights = weights.reshape((n_bits,) + (1,) * (planes.ndim - 1))
+    return np.sum(planes.astype(np.int64) * weights, axis=0).astype(dtype)
+
+
+def pad_to_tiles(m: np.ndarray, tile: Tuple[int, int]) -> np.ndarray:
+    """Zero-pad the trailing 2 dims of ``m`` up to multiples of ``tile``."""
+    tr, tc = tile
+    k, n = m.shape[-2:]
+    pk, pn = (-k) % tr, (-n) % tc
+    if pk == 0 and pn == 0:
+        return m
+    pad = [(0, 0)] * (m.ndim - 2) + [(0, pk), (0, pn)]
+    return np.pad(m, pad)
+
+
+def tile_codes(codes: np.ndarray, tile: Tuple[int, int] = (128, 128)) -> np.ndarray:
+    """codes[K, N] -> tiled[nr, nc, tr, tc] (zero-padded)."""
+    tr, tc = tile
+    p = pad_to_tiles(codes, tile)
+    kk, nn = p.shape
+    return p.reshape(kk // tr, tr, nn // tc, tc).transpose(0, 2, 1, 3)
+
+
+def untile_codes(tiled: np.ndarray, shape: Tuple[int, int]) -> np.ndarray:
+    """Inverse of :func:`tile_codes` (crops padding back to ``shape``)."""
+    nr, nc, tr, tc = tiled.shape
+    full = tiled.transpose(0, 2, 1, 3).reshape(nr * tr, nc * tc)
+    return full[: shape[0], : shape[1]]
+
+
+@dataclasses.dataclass
+class TiledPlanes:
+    """Bit-plane tiles of one weight matrix: the crossbar-group view."""
+
+    tiles: np.ndarray          # uint8 [Nq, nr, nc, tr, tc] binary
+    shape: Tuple[int, int]     # original (K, N)
+    tile: Tuple[int, int]
+    n_bits: int
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.tiles.shape[1], self.tiles.shape[2]
+
+    def occupancy(self) -> np.ndarray:
+        """bool [Nq, nr, nc]: which crossbars hold at least one '1'."""
+        return self.tiles.any(axis=(-1, -2))
+
+    def crossbars_used(self) -> int:
+        return int(self.occupancy().sum())
+
+    def crossbars_total(self) -> int:
+        nr, nc = self.grid
+        return self.n_bits * nr * nc
+
+
+def slice_to_tiles(
+    codes: np.ndarray, n_bits: int, tile: Tuple[int, int] = (128, 128)
+) -> TiledPlanes:
+    """Full §III-B pipeline: codes -> bit planes -> crossbar tiles."""
+    planes = bit_planes(codes, n_bits)                     # [Nq, K, N]
+    tiled = np.stack([tile_codes(p, tile) for p in planes])  # [Nq, nr, nc, tr, tc]
+    return TiledPlanes(tiles=tiled, shape=codes.shape, tile=tile, n_bits=n_bits)
+
+
+def plane_occupancy(codes: np.ndarray, n_bits: int, tile=(128, 128)) -> np.ndarray:
+    return slice_to_tiles(codes, n_bits, tile).occupancy()
+
+
+def nonempty_rows_per_tile(
+    codes: np.ndarray, n_bits: int, plane: int = 1, tile=(128, 128)
+) -> np.ndarray:
+    """Count of non-empty crossbar-rows per tile of bit-plane ``plane``
+    (1-indexed; plane=1 reproduces paper Fig. 5 for the MSB crossbars)."""
+    planes = bit_planes(codes, n_bits)
+    t = tile_codes(planes[plane - 1], tile)        # [nr, nc, tr, tc]
+    return t.any(axis=-1).sum(axis=-1)             # [nr, nc]

@@ -1,0 +1,165 @@
+"""SME <-> model integration: convert any model's linear weights to the
+packed SME format and serve them through the same model code.
+
+``convert_params_to_sme`` walks a param tree and replaces every eligible
+2-D (or stacked 3/4-D) weight matrix with a packed dict:
+
+    {"sme_codes": u8 [..., nr, nc, tr, tc], "sme_rowexp": u8 [..., nr, nc, tr],
+     "sme_sign": u8 [..., K, ceil(N/8)], "sme_scale": f32 [..., 1, N],
+     "sme_nbits": (), "b": <bias passthrough>}
+
+``models.common.linear`` (and ``moe_apply``) detect the packed form and
+dequantize on the fly — in XLA this materializes the bf16 weight per use
+(the Pallas ``sme_spmm`` kernel is the no-materialize path on TPU); the
+HBM-resident format is uint8 codes + 1-bit signs, which is what the
+serve-time roofline memory term sees.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sme import SMEWeight, sme_compress
+
+__all__ = ["pack_sme_param", "convert_params_to_sme", "sme_dequant_jnp",
+           "sme_storage_summary", "abstract_sme_params"]
+
+
+def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
+                   tile=(128, 128)) -> dict:
+    smew = sme_compress(np.asarray(w2d, np.float64), n_bits=n_bits,
+                        window=window, squeeze=squeeze, tile=tile)
+    k, n = smew.shape
+    return {
+        "sme_codes": smew.tiled_codes,                       # [nr,nc,tr,tc] u8
+        "sme_rowexp": smew.row_exp,                          # [nr,nc,tr] u8
+        "sme_sign": smew.sign_packed,                        # [K, ceil(N/8)] u8
+        "sme_scale": np.broadcast_to(
+            smew.scale, (1, n)).astype(np.float32).copy(),   # [1, N]
+    }
+
+
+def _eligible(path_names, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    k, n = leaf.shape[-2], leaf.shape[-1]
+    if k < 128 or n < 128:
+        return False
+    name = path_names[-1]
+    if name not in ("w", "wi", "wg", "wo"):
+        return False
+    if "embed" in path_names:          # gather path: packed gather is a
+        return False                   # kernel of its own; keep dense
+    return True
+
+
+def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
+                          tile=(128, 128), predicate=None):
+    """Returns a new param tree with eligible weights SME-packed."""
+    predicate = predicate or _eligible
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            out = {}
+            for key, sub in tree.items():
+                out[key] = walk(sub, path + [key])
+            return out
+        if isinstance(tree, (list, tuple)):
+            vals = [walk(s, path + [str(i)]) for i, s in enumerate(tree)]
+            return type(tree)(vals)
+        leaf = np.asarray(tree)
+        if not predicate(path, leaf):
+            return tree
+        lead = leaf.shape[:-2]
+        k, n = leaf.shape[-2:]
+        flat = leaf.reshape((-1, k, n))
+        packed = [pack_sme_param(flat[i], n_bits, window, squeeze, tile)
+                  for i in range(flat.shape[0])]
+        stacked = {key: np.stack([p[key] for p in packed]).reshape(
+            lead + packed[0][key].shape) for key in packed[0]}
+        return {key: jnp.asarray(v) for key, v in stacked.items()}
+
+    return walk(params, [])
+
+
+def sme_dequant_jnp(p: dict, n_bits: int = 8, dtype=jnp.bfloat16):
+    """Packed dict -> dense [..., K, N] weight (traced, fused by XLA)."""
+    codes = p["sme_codes"]
+    lead = codes.shape[:-4]
+    nr, nc, tr, tc = codes.shape[-4:]
+    k = p["sme_sign"].shape[-2]
+    n = p["sme_scale"].shape[-1]
+    val = codes.astype(jnp.float32) * (2.0 ** -n_bits)
+    val = val * jnp.exp2(p["sme_rowexp"].astype(jnp.float32))[..., None]
+    # untile [..., nr, nc, tr, tc] -> [..., nr*tr, nc*tc]
+    perm = tuple(range(len(lead))) + tuple(
+        len(lead) + i for i in (0, 2, 1, 3))
+    w = val.transpose(perm).reshape(lead + (nr * tr, nc * tc))
+    w = w[..., :k, :n]
+    # unpack sign bits (big-endian per np.packbits)
+    sb = p["sme_sign"]
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.uint8)
+    bits = (sb[..., None] >> shifts) & jnp.uint8(1)
+    sign = 1.0 - 2.0 * bits.reshape(sb.shape[:-1] + (sb.shape[-1] * 8,)
+                                    )[..., :n].astype(jnp.float32)
+    w = w * sign * p["sme_scale"]
+    return w.astype(dtype)
+
+
+def sme_storage_summary(params) -> dict:
+    """Bytes of packed vs what bf16/f32 dense storage would need."""
+    packed = dense16 = dense32 = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        names = [str(getattr(q, "key", getattr(q, "idx", q))) for q in path]
+        nb = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        packed += nb
+        if "sme_codes" in names:
+            n_w = int(np.prod(leaf.shape))
+            dense16 += 2 * n_w
+            dense32 += 4 * n_w
+        elif not any(s.startswith("sme_") for s in names):
+            dense16 += nb
+            dense32 += nb
+    return {"packed_bytes": packed, "dense_bf16_bytes": dense16,
+            "dense_f32_bytes": dense32,
+            "ratio_vs_bf16": dense16 / max(packed, 1)}
+
+
+def abstract_sme_params(aparams, tile=(128, 128), predicate=None):
+    """Shape-only SME conversion for the dry-run: replaces eligible weight
+    leaves with ShapeDtypeStruct packed dicts (no data touched)."""
+    predicate = predicate or _eligible
+    tr, tc = tile
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + [k]) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(s, path + [str(i)])
+                              for i, s in enumerate(tree))
+        leaf = tree
+        if not hasattr(leaf, "shape") or not predicate(path, leaf):
+            return leaf
+        lead = tuple(leaf.shape[:-2])
+        k, n = leaf.shape[-2:]
+        nr, nc = -(-k // tr), -(-n // tc)
+        return {
+            "sme_codes": jax.ShapeDtypeStruct(lead + (nr, nc, tr, tc), jnp.uint8),
+            "sme_rowexp": jax.ShapeDtypeStruct(lead + (nr, nc, tr), jnp.uint8),
+            "sme_sign": jax.ShapeDtypeStruct(lead + (k, -(-n // 8)), jnp.uint8),
+            "sme_scale": jax.ShapeDtypeStruct(lead + (1, n), jnp.float32),
+        }
+
+    return walk(aparams, [])
+
+
+def cast_params(aparams, dtype=jnp.bfloat16):
+    """Abstract dtype swap for float leaves (bf16 serve baseline)."""
+    def one(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(leaf.shape, dtype)                 if isinstance(leaf, jax.ShapeDtypeStruct) else leaf.astype(dtype)
+        return leaf
+    return jax.tree.map(one, aparams)

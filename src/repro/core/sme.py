@@ -1,0 +1,233 @@
+"""End-to-end SME weight pipeline (paper §III, steps 1-3) + packed formats.
+
+``sme_compress`` runs quantize -> bit-slice -> squeeze-out and returns an
+:class:`SMEWeight` holding everything a linear layer needs at run time:
+
+  * ``tiled_codes`` — post-squeeze shifted codewords per 128x128 tile,
+  * ``row_exp``     — per-tile-row input exponents (the "double the input"
+                      compensation, paper §III-C / Fig. 6-B),
+  * ``sign_packed`` — 1 bit/weight packed signs,
+  * ``scale``       — dequant scale (per-tensor or per-channel),
+  * ``occupancy``   — which tiles still hold data (the lightweight index that
+                      replaces allocated crossbars).
+
+On TPU the payoff is the storage/DMA footprint: see
+``SMEWeight.storage_bits_per_weight`` and the ``kernels/sme_spmm`` Pallas
+kernel that consumes :meth:`SMEWeight.pack_for_kernel`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .bitslice import tile_codes, untile_codes
+from .quant import QuantizedTensor, quantize
+from .squeeze import SqueezeResult, squeeze_out
+
+__all__ = ["SMEWeight", "sme_compress", "sme_matmul_ref_np"]
+
+
+@dataclasses.dataclass
+class SMEWeight:
+    """A weight matrix compressed with the full SME pipeline."""
+
+    # static metadata
+    shape: Tuple[int, int]          # (K, N) = (in_features, out_features)
+    n_bits: int                     # original Nq
+    window: int                     # S
+    squeezed: int                   # x bits squeezed out
+    tile: Tuple[int, int]
+    method: str
+
+    # payload (numpy)
+    tiled_codes: np.ndarray         # uint8 [nr, nc, tr, tc] shifted codewords
+    row_exp: np.ndarray             # uint8 [nr, nc, tr]
+    sign_packed: np.ndarray         # uint8 [K, ceil(N/8)] (1 = negative)
+    scale: np.ndarray               # float64, broadcastable to [K, N]
+    occupancy: np.ndarray           # bool [nr, nc]
+
+    # ---------------------------------------------------------------- props
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.tiled_codes.shape[0], self.tiled_codes.shape[1]
+
+    @property
+    def live_bits(self) -> int:
+        return self.n_bits - self.squeezed
+
+    @property
+    def n_weights(self) -> int:
+        return int(np.prod(self.shape))
+
+    # ------------------------------------------------------------- numerics
+    def dequant(self) -> np.ndarray:
+        """Effective real weight matrix [K, N] (float64)."""
+        val = self.tiled_codes.astype(np.float64) * 2.0 ** -self.n_bits
+        val = val * (2.0 ** self.row_exp.astype(np.float64))[..., None]
+        mag = untile_codes(val, self.shape)
+        return mag * self.sign_dense() * self.scale
+
+    def sign_dense(self) -> np.ndarray:
+        """+-1 sign matrix [K, N] from the packed bits."""
+        k, n = self.shape
+        bits = np.unpackbits(self.sign_packed, axis=1)[:, :n]
+        return (1.0 - 2.0 * bits).astype(np.float64)
+
+    # ------------------------------------------------------------- resources
+    def live_plane_occupancy(self) -> np.ndarray:
+        """bool [live_bits, nr, nc]."""
+        occ = []
+        for p in range(self.squeezed + 1, self.n_bits + 1):
+            bit = (self.tiled_codes >> (self.n_bits - p)) & 1
+            occ.append(bit.any(axis=(-1, -2)))
+        return np.stack(occ) if occ else np.zeros((0,) + self.grid, bool)
+
+    def crossbars_used(self) -> int:
+        return int(self.live_plane_occupancy().sum())
+
+    def storage_bits_per_weight(self, fmt: str = "planes") -> float:
+        """Weight-storage footprint under a given packed format.
+
+        * ``bytecode`` — occupied tiles stored as whole uint8 codewords
+          (kernel v1): ``8 * occ_tiles * tr * tc`` bits.
+        * ``planes``   — only non-empty (tile, plane) bitmaps stored
+          (kernel v2): ``occ_planes * tr * tc`` bits.
+        Both add 1 sign bit per weight plus per-tile metadata
+        (row_exp: tr bytes per occupied tile; index: 4 B per occupied tile).
+        """
+        tr, tc = self.tile
+        occ_tiles = int(self.occupancy.sum())
+        meta_bits = occ_tiles * (tr * 8 + 32)
+        sign_bits = self.n_weights
+        if fmt == "bytecode":
+            payload = occ_tiles * tr * tc * 8
+        elif fmt == "planes":
+            payload = int(self.live_plane_occupancy().sum()) * tr * tc
+        else:
+            raise ValueError(f"unknown fmt {fmt!r}")
+        return (payload + meta_bits + sign_bits) / self.n_weights
+
+    # ------------------------------------------------------------ jax export
+    def to_jax(self, dtype=None) -> Dict[str, "object"]:
+        """Pytree of jnp arrays for the XLA reference path / model params."""
+        import jax.numpy as jnp
+
+        dtype = dtype or jnp.float32
+        return {
+            "tiled_codes": jnp.asarray(self.tiled_codes),
+            "row_exp": jnp.asarray(self.row_exp),
+            "sign_packed": jnp.asarray(self.sign_packed),
+            "scale": jnp.asarray(self.scale, dtype=dtype),
+        }
+
+    def meta(self) -> Dict[str, object]:
+        return {
+            "shape": self.shape, "n_bits": self.n_bits, "window": self.window,
+            "squeezed": self.squeezed, "tile": self.tile, "method": self.method,
+        }
+
+    def pack_for_kernel(self, capacity: Optional[int] = None):
+        """Gathered occupied-tile arrays for the Pallas block-sparse kernel.
+
+        Returns (codes[n_cap, tr, tc] u8, rowexp[n_cap, tr] u8,
+        tile_rc[n_cap, 2] i32, n_occ int).  Tiles are sorted by
+        (col_tile, row_tile) so the kernel revisits each output block over
+        consecutive grid steps.  Padding slots point at tile (0, 0) with
+        all-zero codes (a no-op accumulation).
+        """
+        occ = self.occupancy
+        # np.nonzero over occ.T yields indices sorted by (col_tile, row_tile)
+        order_c, order_r = np.nonzero(occ.T)
+        n_occ = order_r.size
+        cap = capacity if capacity is not None else max(n_occ, 1)
+        if n_occ > cap:
+            raise ValueError(f"capacity {cap} < occupied tiles {n_occ}")
+        tr, tc = self.tile
+        codes = np.zeros((cap, tr, tc), dtype=self.tiled_codes.dtype)
+        rowexp = np.zeros((cap, tr), dtype=np.uint8)
+        rc = np.zeros((cap, 2), dtype=np.int32)
+        codes[:n_occ] = self.tiled_codes[order_r, order_c]
+        rowexp[:n_occ] = self.row_exp[order_r, order_c]
+        rc[:n_occ, 0] = order_r
+        rc[:n_occ, 1] = order_c
+        return codes, rowexp, rc, int(n_occ)
+
+    def pack_csc(self, pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """CSC-of-tiles layout consumed by the ``sme_spmm`` Pallas kernel.
+
+        Per output-column tile ``j`` the occupied row tiles are listed,
+        padded to ``L = max_j nnz(j)`` (or ``pad_to``) so the kernel grid is
+        rectangular: (M_tiles, N_tiles, L).  Padding slots carry all-zero
+        codes and point at row tile 0 (a no-op accumulation guarded by
+        ``nnz`` in the kernel).
+
+        Returns dict with:
+          codes    u8  [Nt, L, tr, tc]    shifted codewords
+          sign     u8  [Nt, L, tr//8, tc] sign bits packed along rows (1 = neg)
+          rowscale f32 [Nt, L, tr]        2^row_exp input compensation
+          rowid    i32 [Nt, L]            source row-tile index into x
+          nnz      i32 [Nt]               occupied tiles per column
+        """
+        nr, nc = self.grid
+        tr, tc = self.tile
+        occ = self.occupancy
+        nnz = occ.sum(axis=0).astype(np.int32)               # per col tile
+        L = int(pad_to if pad_to is not None else max(int(nnz.max()), 1))
+        if int(nnz.max()) > L:
+            raise ValueError(f"pad_to={L} < max nnz per column {int(nnz.max())}")
+        codes = np.zeros((nc, L, tr, tc), dtype=self.tiled_codes.dtype)
+        sign = np.zeros((nc, L, tr // 8, tc), dtype=np.uint8)
+        rowscale = np.ones((nc, L, tr), dtype=np.float32)
+        rowid = np.zeros((nc, L), dtype=np.int32)
+        # dense padded sign bits in the tiled view
+        k, n = self.shape
+        bits = np.unpackbits(self.sign_packed, axis=1)[:, :n]     # [K, N] 1=neg
+        from .bitslice import tile_codes as _tile
+        sign_tiled = _tile(bits, self.tile)                       # [nr, nc, tr, tc]
+        for j in range(nc):
+            rows = np.nonzero(occ[:, j])[0]
+            for l, i in enumerate(rows):
+                codes[j, l] = self.tiled_codes[i, j]
+                sign[j, l] = np.packbits(
+                    sign_tiled[i, j].astype(np.uint8), axis=0)
+                rowscale[j, l] = (2.0 ** self.row_exp[i, j]).astype(np.float32)
+                rowid[j, l] = i
+        return {
+            "codes": codes, "sign": sign, "rowscale": rowscale,
+            "rowid": rowid, "nnz": nnz,
+        }
+
+
+def sme_compress(
+    w: np.ndarray,
+    n_bits: int = 8,
+    window: int = 3,
+    squeeze: int = 1,
+    tile: Tuple[int, int] = (128, 128),
+    channel_axis: Optional[int] = None,
+    method: str = "sme",
+) -> SMEWeight:
+    """Run the full SME pipeline on a real weight matrix ``w[K, N]``."""
+    if w.ndim != 2:
+        raise ValueError("sme_compress expects a 2-D weight matrix")
+    q: QuantizedTensor = quantize(
+        w, method=method, n_bits=n_bits, window=window, channel_axis=channel_axis
+    )
+    sq: SqueezeResult = squeeze_out(q.codes, n_bits, squeeze, tile)
+    occ = (sq.tiled_codes != 0).any(axis=(-1, -2))
+    signs = np.packbits((q.signs < 0).astype(np.uint8), axis=1)
+    return SMEWeight(
+        shape=tuple(w.shape), n_bits=n_bits, window=window, squeezed=squeeze,
+        tile=tile, method=method,
+        tiled_codes=sq.tiled_codes, row_exp=sq.row_exp,
+        sign_packed=signs, scale=np.asarray(q.scale, dtype=np.float64),
+        occupancy=occ,
+    )
+
+
+def sme_matmul_ref_np(x: np.ndarray, smew: SMEWeight) -> np.ndarray:
+    """Oracle: x[B, K] @ dequant(W)[K, N] in float64 (numpy)."""
+    return np.asarray(x, np.float64) @ smew.dequant()

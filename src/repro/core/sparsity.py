@@ -1,0 +1,47 @@
+"""Bit-level sparsity statistics (paper Figs. 2, 4, 5)."""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from .bitslice import bit_planes, nonempty_rows_per_tile
+from .quant import QuantizedTensor
+
+__all__ = [
+    "per_plane_sparsity",
+    "overall_bit_sparsity",
+    "nonempty_row_histogram",
+    "weight_sparsity",
+]
+
+
+def per_plane_sparsity(q: QuantizedTensor) -> np.ndarray:
+    """Fraction of 0-bits per bit plane, MSB first (paper Fig. 2 bars)."""
+    planes = bit_planes(q.codes, q.n_bits).reshape(q.n_bits, -1)
+    return 1.0 - planes.mean(axis=1)
+
+
+def overall_bit_sparsity(q: QuantizedTensor) -> float:
+    """Fraction of 0-bits over all planes (paper Fig. 9 sparsity metric)."""
+    return float(per_plane_sparsity(q).mean())
+
+
+def weight_sparsity(w: np.ndarray, tol: float = 0.0) -> float:
+    w = np.asarray(w)
+    return float((np.abs(w) <= tol).mean())
+
+
+def nonempty_row_histogram(
+    q: QuantizedTensor, plane: int = 1, tile=(128, 128),
+    bins: Sequence[float] = (0, 1, 4, 8, 16, 32, 64, 128),
+) -> Dict[str, np.ndarray]:
+    """Distribution of non-empty rows per MSB crossbar (paper Fig. 5)."""
+    counts = nonempty_rows_per_tile(q.codes, q.n_bits, plane, tile).ravel()
+    hist, edges = np.histogram(counts, bins=list(bins) + [tile[0] + 1])
+    return {
+        "counts": counts,
+        "hist": hist,
+        "edges": edges,
+        "mean_fraction": counts.mean() / tile[0] if counts.size else 0.0,
+    }

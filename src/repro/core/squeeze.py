@@ -1,0 +1,105 @@
+"""Bit-wise squeeze-out scheme (paper §III-C).
+
+Per crossbar group (= per 128x128 tile position), iteratively:
+
+  1. find the rows whose *current* MSB plane is non-empty;
+  2. shift those rows' codewords right by one bit (``code >>= 1``) — the row
+     moves one plane later in the group, the LSB plane's content is dropped;
+  3. compensate exactly by doubling the *input* of those rows
+     (``I * W == (I * 2) * (W / 2)``); in the paper this is one extra
+     bit-serial input cycle, on TPU it is a per-row constant multiply.
+
+After ``x`` iterations the first ``x`` planes of every tile are empty and
+their crossbars are released: ``Nq -> Nq - x`` planes, per-row input
+exponents in ``0..x``.  The error is bounded by the dropped LSBs
+(``<= (2^x - 1) * 2^-Nq`` per weight, pre-scale): rows that *triggered* a
+squeeze carry an S-window pattern anchored at the MSB, so their trailing
+bits are zero and they lose nothing — exactly the paper's argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from .bitslice import tile_codes, untile_codes
+
+__all__ = ["SqueezeResult", "squeeze_out", "dequant_squeezed", "squeeze_error_bound"]
+
+
+@dataclasses.dataclass
+class SqueezeResult:
+    """Post-squeeze weights of one matrix, in the tiled (crossbar-group) view."""
+
+    tiled_codes: np.ndarray    # uint8/16 [nr, nc, tr, tc] shifted codewords
+    row_exp: np.ndarray        # uint8 [nr, nc, tr] per-tile-row input exponent (0..x)
+    n_bits: int                # original Nq
+    squeezed: int              # x = number of planes squeezed out
+    shape: Tuple[int, int]     # original (K, N)
+    tile: Tuple[int, int]
+
+    @property
+    def live_bits(self) -> int:
+        """Planes that still hold data (Nq - x)."""
+        return self.n_bits - self.squeezed
+
+    def live_plane_occupancy(self) -> np.ndarray:
+        """bool [Nq - x, nr, nc] occupancy of the surviving planes."""
+        occ = []
+        for p in range(self.squeezed + 1, self.n_bits + 1):
+            bit = (self.tiled_codes >> (self.n_bits - p)) & 1
+            occ.append(bit.any(axis=(-1, -2)))
+        return np.stack(occ)
+
+    def crossbars_used(self) -> int:
+        return int(self.live_plane_occupancy().sum())
+
+
+def squeeze_out(
+    codes: np.ndarray,
+    n_bits: int,
+    x: int,
+    tile: Tuple[int, int] = (128, 128),
+) -> SqueezeResult:
+    """Apply ``x`` rounds of squeeze-out to a codeword matrix ``codes[K, N]``.
+
+    Row decisions are made independently per tile (each crossbar has its own
+    input register / RCMR, paper Fig. 6-B), so the result lives in the tiled
+    view: different column-tiles of the same matrix row may shift differently.
+    """
+    if not 0 <= x < n_bits:
+        raise ValueError(f"squeeze depth x={x} must be in [0, Nq)")
+    tiled = tile_codes(codes, tile).astype(codes.dtype)    # [nr, nc, tr, tc]
+    nr, nc, tr, tc = tiled.shape
+    row_exp = np.zeros((nr, nc, tr), dtype=np.uint8)
+
+    for t in range(x):
+        # Current MSB plane is (1-indexed) plane t+1: byte bit Nq-(t+1).
+        msb = (tiled >> (n_bits - (t + 1))) & 1            # [nr, nc, tr, tc]
+        hit = msb.any(axis=-1)                             # [nr, nc, tr]
+        tiled = np.where(hit[..., None], tiled >> 1, tiled)
+        row_exp += hit.astype(np.uint8)
+
+    # Invariant: after x rounds the top-x bits of every codeword are zero.
+    assert int(((tiled >> (n_bits - x)) if x else np.zeros(1, np.uint8)).max()) == 0
+    return SqueezeResult(
+        tiled_codes=tiled, row_exp=row_exp, n_bits=n_bits,
+        squeezed=x, shape=codes.shape, tile=tile,
+    )
+
+
+def dequant_squeezed(sq: SqueezeResult) -> np.ndarray:
+    """Effective magnitude matrix [K, N] after squeeze (value-domain, unscaled).
+
+    ``w_eff = 2^row_exp * value(shifted_code)`` — the input-doubling identity
+    applied back onto the weight so callers can compare against the original.
+    """
+    val = sq.tiled_codes.astype(np.float64) * 2.0 ** -sq.n_bits
+    val = val * (2.0 ** sq.row_exp.astype(np.float64))[..., None]
+    return untile_codes(val, sq.shape)
+
+
+def squeeze_error_bound(n_bits: int, x: int) -> float:
+    """Worst-case per-weight magnitude error of x-bit squeeze (value domain)."""
+    return (2.0 ** x - 1.0) * 2.0 ** -n_bits

@@ -1,0 +1,2 @@
+from .synthetic import lm_batches, markov_table, image_task
+from .pipeline import Prefetcher, shard_batch, checked_iterator

@@ -1,0 +1,108 @@
+"""Extract roofline inputs from lowered/compiled XLA artifacts.
+
+``collective_bytes`` is not exposed by ``cost_analysis()`` — we parse the
+HLO text and sum the *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (per task §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+__all__ = ["shape_bytes", "collective_bytes", "cost_summary"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f4e2m1fn": 1,
+}
+
+# a single shape token, e.g. ``bf16[2,16,128]`` or ``f32[]``
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+# an HLO instruction definition: ``%name = <type spec> opcode(...)``
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_COLL_RE = re.compile(
+    r"\b(" + "|".join(_COLLECTIVE_OPS) + r")(?:-start|-done)?\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(type_spec: str) -> int:
+    """Total bytes of all shape tokens in an HLO type spec (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_spec):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            continue  # token-like matches that aren't dtypes
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += size * n
+    return total
+
+
+def _build_symbol_table(hlo_text: str) -> Dict[str, int]:
+    table: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # type spec is everything up to the opcode; taking the full rhs is
+        # safe because operand lists repeat operand *names*, not shapes —
+        # except fused computations; restrict to text before the first '('.
+        head = rhs.split("(", 1)[0]
+        b = shape_bytes(head)
+        if b:
+            table[name] = b
+    return table
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """(total_operand_bytes, per-op-kind breakdown) of collectives in HLO."""
+    table = _build_symbol_table(hlo_text)
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        kind = m.group(1)
+        args = line[m.end():]
+        args = args.split(")", 1)[0]
+        got = 0
+        for op in _OPERAND_RE.findall(args):
+            got += table.get(op, 0)
+        if got == 0:
+            # operands may be inline-typed (rare) — fall back to result size
+            head = line.split("=", 1)[-1].split("(", 1)[0]
+            got = shape_bytes(head)
+        per_kind[kind] += got
+        total += got
+    return total, per_kind
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+    for k, v in ca.items():
+        if k.startswith("bytes accessed") and isinstance(v, (int, float)):
+            out.setdefault("bytes", float(v))
+    return out

@@ -1,0 +1,271 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 24 layers contributes its body a single time, so flops /
+bytes / collective counts are understated by the trip count (we verified a
+15x gap on qwen2 train_4k).  This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with while-loop bodies multiplied by
+their trip counts:
+
+  * flops: ``dot`` ops via dot_dimension_numbers x operand shapes (exact),
+    elementwise/fusion ops as one flop per output element (minor term);
+  * bytes: operands + outputs at fusion/op boundaries (HBM-traffic
+    approximation, matching HloCostAnalysis' fusion handling);
+  * collective bytes: operand sizes per collective kind, execution-weighted.
+
+Trip counts come from each while condition's ``compare(iter, constant)``;
+loops whose bound cannot be parsed are counted once and reported in
+``unknown_trip_loops``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["analyze_hlo", "HLOCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f4e2m1fn": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"\b[su]\d+\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes whose operand/output bytes we skip (no real data movement)
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "domain"}
+# ops that represent real materialization points on TPU.  Standalone
+# elementwise ops are *excluded*: TPU XLA fuses elementwise chains, so
+# counting each CPU-HLO intermediate would overstate HBM traffic.  Fusion
+# boundaries, dots, data movement and collectives are counted.
+_BYTES_OPS = {"fusion", "dot", "copy", "copy-start", "gather", "scatter",
+              "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+              "custom-call", "convolution", "reduce-window", "select-and-scatter",
+              "transpose", "reshape", "broadcast", "iota", "concatenate", "pad",
+              "slice", "rng", "rng-bit-generator", "cholesky", "triangular-solve"}
+_NO_BYTES_HINT = {"broadcast", "iota", "reshape"}  # usually free on TPU
+# ops that do math one-flop-per-output-element (approximation)
+_EW_HINT = {"fusion", "add", "multiply", "subtract", "divide", "exponential",
+            "tanh", "rsqrt", "sqrt", "log", "power", "maximum", "minimum",
+            "select", "compare", "convert", "reduce", "map", "negate", "abs",
+            "sign", "floor", "ceil", "logistic", "cosine", "sine"}
+
+
+def _shape_info(type_spec: str) -> Tuple[int, int]:
+    """(total bytes, total elements) across all shape tokens in a type."""
+    bts = el = 0
+    for dtype, dims in _SHAPE_RE.findall(type_spec):
+        isz = _DTYPE_BYTES.get(dtype)
+        if isz is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        bts += isz * n
+        el += n
+    return bts, el
+
+
+class _Instr:
+    __slots__ = ("name", "type_spec", "opcode", "rest", "out_bytes", "out_elems")
+
+    def __init__(self, name, type_spec, opcode, rest):
+        self.name = name
+        self.type_spec = type_spec
+        self.opcode = opcode
+        self.rest = rest
+        self.out_bytes, self.out_elems = _shape_info(type_spec)
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            comps[cur].append(_Instr(*m.groups()))
+    comps["__entry__"] = comps.get(entry, [])  # type: ignore[arg-type]
+    if entry:
+        comps["__entry_name__"] = entry  # type: ignore[assignment]
+    return comps
+
+
+def _symbol_table(instrs: List[_Instr]) -> Dict[str, _Instr]:
+    return {i.name: i for i in instrs}
+
+
+def _dot_flops(instr: _Instr, table: Dict[str, _Instr]) -> float:
+    # operands: first two %refs in rest
+    ops = _OPERAND_RE.findall(instr.rest)
+    if len(ops) < 2:
+        return 0.0
+    lhs = table.get(ops[0])
+    if lhs is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    lhs_dims = []
+    sm = _SHAPE_RE.search(lhs.type_spec)
+    if sm and sm.group(2):
+        lhs_dims = [int(x) for x in sm.group(2).split(",") if x]
+    k = float(np.prod([lhs_dims[d] for d in cdims])) if cdims and lhs_dims else 1.0
+    return 2.0 * instr.out_elems * k
+
+
+def _trip_count(cond_instrs: List[_Instr]) -> Optional[int]:
+    """Parse `iter < N` loop bounds from the while condition."""
+    consts: Dict[str, int] = {}
+    for i in cond_instrs:
+        m = _CONST_INT_RE.search(f"{i.type_spec} {i.opcode}({i.rest}")
+        if m and i.opcode == "constant":
+            consts[i.name] = int(m.group(1))
+    best = None
+    for i in cond_instrs:
+        if i.opcode == "compare" and "direction=LT" in i.rest:
+            for op in _OPERAND_RE.findall(i.rest.split(")", 1)[0]):
+                if op in consts:
+                    best = max(best or 0, consts[op])
+    if best is None and consts:
+        best = max(consts.values())
+    return best
+
+
+class HLOCost(dict):
+    pass
+
+
+def analyze_hlo(hlo: str) -> HLOCost:
+    comps = _parse_computations(hlo)
+    entry_name = comps.get("__entry_name__")
+    memo: Dict[str, dict] = {}
+    unknown_loops = [0]
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = dict(flops=0.0, bytes=0.0, coll=0.0,
+                          coll_kinds={k: 0.0 for k in COLLECTIVES})
+        instrs = comps.get(name, [])
+        table = _symbol_table(instrs)
+        acc = dict(flops=0.0, bytes=0.0, coll=0.0,
+                   coll_kinds={k: 0.0 for k in COLLECTIVES})
+
+        def add(sub: dict, w: float = 1.0):
+            acc["flops"] += w * sub["flops"]
+            acc["bytes"] += w * sub["bytes"]
+            acc["coll"] += w * sub["coll"]
+            for k in COLLECTIVES:
+                acc["coll_kinds"][k] += w * sub["coll_kinds"][k]
+
+        for ins in instrs:
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            # operand bytes
+            in_bytes = 0
+            head = ins.rest.split(")", 1)[0]
+            for ref in _OPERAND_RE.findall(head):
+                o = table.get(ref)
+                if o is not None:
+                    in_bytes += o.out_bytes
+            base = op.split("-start")[0]
+            if base in COLLECTIVES or base.rstrip("-done") in COLLECTIVES:
+                kind = next((k for k in COLLECTIVES if op.startswith(k)), None)
+                if kind and not op.endswith("-done"):
+                    acc["coll"] += in_bytes
+                    acc["coll_kinds"][kind] += in_bytes
+                acc["bytes"] += in_bytes + ins.out_bytes
+                continue
+            if op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trip = _trip_count(comps.get(cond, [])) if cond else None
+                if trip is None:
+                    trip = 1
+                    unknown_loops[0] += 1
+                if body:
+                    add(comp_cost(body), float(trip))
+                if cond:
+                    add(comp_cost(cond), float(trip))
+                continue
+            if op in ("fusion", "sort", "map", "reduce", "scatter",
+                      "reduce-window", "custom-call"):
+                # recurse for *flops* only (dots hidden inside); bytes are
+                # counted at the fusion boundary, matching HloCostAnalysis.
+                for mm in re.finditer(
+                        r"(?:calls=|to_apply=)%?([\w.\-]+)", ins.rest):
+                    sub = comp_cost(mm.group(1))
+                    acc["flops"] += sub["flops"]
+                    acc["coll"] += sub["coll"]
+                    for k in COLLECTIVES:
+                        acc["coll_kinds"][k] += sub["coll_kinds"][k]
+            elif op in ("call", "conditional", "async-start"):
+                for mm in re.finditer(
+                        r"(?:calls=|to_apply=|branch_computations=\{)%?([\w.\-]+)",
+                        ins.rest):
+                    add(comp_cost(mm.group(1)), 1.0)
+                continue  # internals carry the bytes; skip boundary
+            if op == "dot":
+                acc["flops"] += _dot_flops(ins, table)
+            elif op in _EW_HINT:
+                acc["flops"] += ins.out_elems
+            if op in _BYTES_OPS and op not in _NO_BYTES_HINT:
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the slice, not the whole operand
+                    acc["bytes"] += 2 * ins.out_bytes
+                elif op in ("dynamic-update-slice", "scatter"):
+                    # reads + writes the update region only (buffer aliased)
+                    upd = 0
+                    refs = _OPERAND_RE.findall(head)[1:]
+                    for ref in refs:
+                        o = table.get(ref)
+                        if o is not None:
+                            upd += o.out_bytes
+                    acc["bytes"] += 2 * upd
+                else:
+                    acc["bytes"] += in_bytes + ins.out_bytes
+        memo[name] = acc
+        return acc
+
+    total = comp_cost(entry_name) if entry_name else dict(
+        flops=0.0, bytes=0.0, coll=0.0, coll_kinds={})
+    return HLOCost(
+        flops=total["flops"], bytes=total["bytes"],
+        collective_bytes=total["coll"], collectives=total["coll_kinds"],
+        unknown_trip_loops=unknown_loops[0],
+    )

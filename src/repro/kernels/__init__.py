@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for SME's perf-critical compute (validated in interpret mode)."""

@@ -1,0 +1,4 @@
+from .ops import (pack_operands, sme_linear, sme_linear_from_weight,
+                  pack_operands6, sme_linear6_from_weight)
+from .sme_spmm import sme_spmm
+from .sme_spmm6 import sme_spmm6

@@ -1,0 +1,47 @@
+"""Pure-jnp/numpy oracle for the ``sme_spmm`` kernel."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.sme import SMEWeight
+
+__all__ = ["dequant_ref", "sme_spmm_ref", "dequant_csc_jnp", "sme_spmm_csc_ref"]
+
+
+def dequant_ref(smew: SMEWeight) -> np.ndarray:
+    """Effective dense weight matrix (float64, includes sign/scale/row_exp)."""
+    return smew.dequant()
+
+
+def sme_spmm_ref(x: np.ndarray, smew: SMEWeight) -> np.ndarray:
+    """Unscaled oracle matching the kernel output: scale applied separately
+    by the caller, exactly as ``ops.sme_linear`` does."""
+    w = smew.dequant() / smew.scale        # kernel output excludes `scale`
+    return np.asarray(x, np.float64) @ w
+
+
+def dequant_csc_jnp(csc: dict, n_bits: int, k_pad: int) -> jnp.ndarray:
+    """Rebuild the dense (unscaled) effective weight from the CSC arrays —
+    an independent second oracle exercising the packed layout itself."""
+    codes = np.asarray(csc["codes"])       # [Nt, L, bk, bn]
+    sign = np.asarray(csc["sign"])         # [Nt, L, bk//8, bn]
+    rowscale = np.asarray(csc["rowscale"]) # [Nt, L, bk]
+    rowid = np.asarray(csc["rowid"])
+    nnz = np.asarray(csc["nnz"])
+    nt, L, bk, bn = codes.shape
+    w = np.zeros((k_pad, nt * bn), dtype=np.float64)
+    for j in range(nt):
+        for l in range(int(nnz[j])):
+            mag = codes[j, l].astype(np.float64) * 2.0 ** -n_bits
+            bits = np.unpackbits(sign[j, l], axis=0, count=bk)
+            sgn = 1.0 - 2.0 * bits.astype(np.float64)
+            tilew = mag * sgn * rowscale[j, l][:, None]
+            i = int(rowid[j, l])
+            w[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn] = tilew
+    return jnp.asarray(w)
+
+
+def sme_spmm_csc_ref(x, csc: dict, n_bits: int) -> jnp.ndarray:
+    w = dequant_csc_jnp(csc, n_bits, x.shape[-1])
+    return jnp.asarray(np.asarray(x, np.float64) @ np.asarray(w))

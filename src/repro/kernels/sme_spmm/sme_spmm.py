@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: SME packed block-sparse dequant-matmul.
+
+Computes ``y[M, N] = x[M, K] @ W_eff`` where ``W_eff`` is an SME-compressed
+weight matrix stored as CSC-of-128x128-tiles (see
+``core.sme.SMEWeight.pack_csc``):
+
+  * occupied tiles hold uint8 *shifted codewords* (1 byte/weight from HBM
+    instead of 2-4 for bf16/f32 — the TPU analogue of the paper's crossbar
+    savings, DESIGN.md §2);
+  * dequantization (codes -> f32, sign bits, ``2^row_exp`` squeeze-out
+    compensation) happens **in VMEM on the VPU**, so the MXU sees one dense
+    f32 matmul per tile;
+  * empty tiles are never stored; a scalar-prefetch CSC index
+    (``rowid``/``nnz``) drives the BlockSpec index maps (megablocks-style)
+    so padding slots are skipped with ``pl.when``.
+
+Grid: ``(M_tiles, N_tiles, L)`` with L innermost — each output block stays
+resident in a VMEM f32 scratch accumulator across its column's tile list
+and is flushed once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sme_spmm"]
+
+
+def _kernel(rowid_ref, nnz_ref, x_ref, codes_ref, sign_ref, rowscale_ref,
+            o_ref, acc_ref, *, n_bits: int, bk: int, bn: int):
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(l < nnz_ref[j])
+    def _accum():
+        codes = codes_ref[0, 0]                              # [bk, bn] u8
+        mag = codes.astype(jnp.float32) * (2.0 ** -n_bits)
+        # sign bits packed along rows, MSB-first (np.packbits axis=0)
+        sb = sign_ref[0, 0]                                  # [bk//8, bn] u8
+        shifts = 7 - jax.lax.broadcasted_iota(jnp.uint8, (1, 8, 1), 1)
+        bits = (sb[:, None, :] >> shifts) & jnp.uint8(1)
+        sgn = 1.0 - 2.0 * bits.reshape(bk, bn).astype(jnp.float32)
+        rs = rowscale_ref[0, 0]                              # [bk] f32 = 2^row_exp
+        w = mag * sgn * rs[:, None]
+        x = x_ref[...].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(l == last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sme_spmm(
+    x: jax.Array,            # [M, K_pad] (K padded to row-tile multiple)
+    codes: jax.Array,        # u8 [Nt, L, bk, bn]
+    sign: jax.Array,         # u8 [Nt, L, bk//8, bn]
+    rowscale: jax.Array,     # f32 [Nt, L, bk]
+    rowid: jax.Array,        # i32 [Nt, L]
+    nnz: jax.Array,          # i32 [Nt]
+    *,
+    n_bits: int,
+    bm: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y [M, Nt*bn].  M must be a multiple of ``bm``."""
+    m, k_pad = x.shape
+    nt, L, bk, bn = codes.shape
+    if m % bm:
+        raise ValueError(f"M={m} not a multiple of bm={bm}")
+    if k_pad % bk:
+        raise ValueError(f"K_pad={k_pad} not a multiple of bk={bk}")
+
+    grid = (m // bm, nt, L)
+    kernel = functools.partial(_kernel, n_bits=n_bits, bk=bk, bn=bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, j, l, rowid, nnz: (mi, rowid[j, l])),
+            pl.BlockSpec((1, 1, bk, bn), lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
+            pl.BlockSpec((1, 1, bk // 8, bn), lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
+            pl.BlockSpec((1, 1, bk), lambda mi, j, l, rowid, nnz: (j, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, j, l, rowid, nnz: (mi, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nt * bn), out_dtype),
+        interpret=interpret,
+    )(rowid, nnz, x, codes, sign, rowscale)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel v2: minifloat-6 block-sparse dequant-matmul.
+
+Same CSC-of-tiles structure as ``sme_spmm`` (v1) but the weight payload is
+the 6-bit minifloat re-encoding of squeezed SME codes (sign+exp+mant packed
+4-codes-per-3-bytes): HBM moves **0.75 B/weight** instead of v1's
+1 B codes + sign bitmap (~1.13 B) or bf16's 2 B.  Decode runs on the VPU:
+
+    c   = unpack6(bytes)           # 4x [bk, bn/4] 6-bit lanes
+    w   = (e>0) * sign * (4+m) * 2^-(e+squeezed+2) * 2^row_exp
+
+followed by one MXU matmul per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sme_spmm6"]
+
+
+def _kernel(rowid_ref, nnz_ref, x_ref, packed_ref, rowscale_ref,
+            o_ref, acc_ref, *, squeezed: int, bk: int, bn: int):
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+    last = pl.num_programs(2) - 1
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(l < nnz_ref[j])
+    def _accum():
+        pk = packed_ref[0, 0]                          # [bk, 3*bn/4] u8
+        t = pk.reshape(bk, bn // 4, 3).astype(jnp.uint16)
+        b0, b1, b2 = t[..., 0], t[..., 1], t[..., 2]
+        c0 = b0 & 63
+        c1 = ((b0 >> 6) | (b1 << 2)) & 63
+        c2 = ((b1 >> 4) | (b2 << 4)) & 63
+        c3 = (b2 >> 2) & 63
+        c = jnp.stack([c0, c1, c2, c3], axis=-1).reshape(bk, bn)
+        m = (c & 3).astype(jnp.float32)
+        e = ((c >> 2) & 7).astype(jnp.float32)
+        s = 1.0 - 2.0 * ((c >> 5) & 1).astype(jnp.float32)
+        mag = (4.0 + m) * jnp.exp2(-(e + (squeezed + 2.0)))
+        w = jnp.where(e > 0, s * mag, 0.0)
+        rs = rowscale_ref[0, 0]                        # [bk] = 2^row_exp
+        w = w * rs[:, None]
+        x = x_ref[...].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(l == last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sme_spmm6(
+    x: jax.Array,            # [M, K_pad]
+    packed: jax.Array,       # u8 [Nt, L, bk, 3*bn/4]
+    rowscale: jax.Array,     # f32 [Nt, L, bk]
+    rowid: jax.Array,        # i32 [Nt, L]
+    nnz: jax.Array,          # i32 [Nt]
+    *,
+    squeezed: int,
+    bn: int = 128,
+    bm: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k_pad = x.shape
+    nt, L, bk, _ = packed.shape
+    if m % bm or k_pad % bk:
+        raise ValueError((m, bm, k_pad, bk))
+    grid = (m // bm, nt, L)
+    kernel = functools.partial(_kernel, squeezed=squeezed, bk=bk, bn=bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, j, l, rowid, nnz: (mi, rowid[j, l])),
+            pl.BlockSpec((1, 1, bk, 3 * bn // 4),
+                         lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
+            pl.BlockSpec((1, 1, bk), lambda mi, j, l, rowid, nnz: (j, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, j, l, rowid, nnz: (mi, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nt * bn), out_dtype),
+        interpret=interpret,
+    )(rowid, nnz, x, packed, rowscale)

@@ -1,0 +1,24 @@
+"""Production mesh construction (task §MULTI-POD DRY-RUN).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; ordinary tests/benches see the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests use subprocesses with
+    --xla_force_host_platform_device_count to get >1)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures + the paper's CNNs, one API."""
+from .model import ModelAPI, build_model, param_count, active_param_count

@@ -1,0 +1,139 @@
+"""Per-layer block dispatcher: one superblock slot = (mixer, MLP) pair.
+
+Slot kinds: ``attn`` / ``attn_global`` (full causal), ``attn_local``
+(window = cfg.swa_window), ``mamba``, ``mlstm``, ``slstm``.  The MLP half is
+dense SwiGLU/GELU, MoE (per ``cfg.moe_pattern``), or absent (d_ff == 0,
+xLSTM-style blocks).  MLA replaces GQA whenever ``cfg.attn_type == 'mla'``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import Initializer, apply_norm, mlp_apply, mlp_init, norm_init
+from . import attention as att
+from . import ssm
+from .moe import moe_apply, moe_init
+
+__all__ = ["block_init", "block_train", "block_prefill", "block_decode",
+           "init_block_cache", "ATTN_KINDS"]
+
+ATTN_KINDS = ("attn", "attn_global", "attn_local")
+
+
+def _window(cfg, kind: str) -> int:
+    return cfg.swa_window if kind == "attn_local" else 0
+
+
+def block_init(init: Initializer, cfg, kind: str, use_moe: bool):
+    p = {"norm1": norm_init(init, cfg.d_model, cfg.norm)}
+    if kind in ATTN_KINDS:
+        p["mix"] = (att.mla_init(init, cfg) if cfg.attn_type == "mla"
+                    else att.gqa_init(init, cfg))
+    elif kind == "mamba":
+        p["mix"] = ssm.mamba_init(init, cfg)
+    elif kind == "mlstm":
+        p["mix"] = ssm.mlstm_init(init, cfg)
+    elif kind == "slstm":
+        p["mix"] = ssm.slstm_init(init, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if use_moe:
+        p["norm2"] = norm_init(init, cfg.d_model, cfg.norm)
+        p["mlp"] = moe_init(init, cfg)
+    elif cfg.d_ff:
+        p["norm2"] = norm_init(init, cfg.d_model, cfg.norm)
+        p["mlp"] = mlp_init(init, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _mlp_half(p, x, cfg, use_moe):
+    if "mlp" not in p:
+        return x
+    h = apply_norm(x, p["norm2"], cfg.norm)
+    h = moe_apply(p["mlp"], h, cfg) if use_moe else mlp_apply(h, p["mlp"], cfg.act)
+    return x + h
+
+
+def block_train(p, x, cfg, kind: str, use_moe: bool,
+                block_q: int = 512, block_k: int = 512):
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if kind in ATTN_KINDS:
+        if cfg.attn_type == "mla":
+            y, _ = att.mla_prefill(p["mix"], h, cfg, block_q=block_q, block_k=block_k)
+        else:
+            y, _ = att.gqa_prefill(p["mix"], h, cfg, window=_window(cfg, kind),
+                                   block_q=block_q, block_k=block_k)
+    elif kind == "mamba":
+        y, _ = ssm.mamba_apply(p["mix"], h, cfg)
+    elif kind == "mlstm":
+        y, _ = ssm.mlstm_apply(p["mix"], h, cfg)
+    else:
+        y, _ = ssm.slstm_apply(p["mix"], h, cfg)
+    x = x + y
+    return _mlp_half(p, x, cfg, use_moe)
+
+
+def block_prefill(p, x, cfg, kind: str, use_moe: bool, cache_len: int,
+                  block_q: int = 512, block_k: int = 512):
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if kind in ATTN_KINDS:
+        if cfg.attn_type == "mla":
+            y, cache = att.mla_prefill(p["mix"], h, cfg, cache_len=cache_len,
+                                       block_q=block_q, block_k=block_k)
+        else:
+            y, cache = att.gqa_prefill(p["mix"], h, cfg,
+                                       window=_window(cfg, kind),
+                                       cache_len=cache_len,
+                                       block_q=block_q, block_k=block_k)
+    elif kind == "mamba":
+        y, cache = ssm.mamba_apply(p["mix"], h, cfg, want_state=True)
+    elif kind == "mlstm":
+        y, cache = ssm.mlstm_apply(p["mix"], h, cfg, want_state=True)
+    else:
+        y, cache = ssm.slstm_apply(p["mix"], h, cfg, want_state=True)
+    x = x + y
+    return _mlp_half(p, x, cfg, use_moe), cache
+
+
+def block_decode(p, x, cache, pos, cfg, kind: str, use_moe: bool):
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if kind in ATTN_KINDS:
+        if cfg.attn_type == "mla":
+            y, cache = att.mla_decode(p["mix"], h, cache, pos, cfg)
+        else:
+            y, cache = att.gqa_decode(p["mix"], h, cache, pos, cfg,
+                                      window=_window(cfg, kind))
+    elif kind == "mamba":
+        y, cache = ssm.mamba_decode(p["mix"], h, cache, cfg)
+    elif kind == "mlstm":
+        y, cache = ssm.mlstm_decode(p["mix"], h, cache, cfg)
+    else:
+        y, cache = ssm.slstm_decode(p["mix"], h, cache, cfg)
+    x = x + y
+    return _mlp_half(p, x, cfg, use_moe), cache
+
+
+def init_block_cache(cfg, kind: str, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Abstract-friendly zero cache for one block."""
+    if kind in ATTN_KINDS:
+        if cfg.attn_type == "mla":
+            return {
+                "c": jnp.zeros((batch, s_max, cfg.kv_lora), dtype),
+                "k_pe": jnp.zeros((batch, s_max, cfg.rope_head_dim), dtype),
+            }
+        w = min(cfg.swa_window, s_max) if kind == "attn_local" and cfg.swa_window else s_max
+        return {
+            "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    if kind == "mamba":
+        d_in, _, n = ssm._mamba_dims(cfg)
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+            "h": jnp.zeros((batch, d_in, n), jnp.float32),
+        }
+    if kind == "mlstm":
+        return ssm.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_state_init(cfg, batch)
+    raise ValueError(kind)

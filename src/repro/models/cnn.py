@@ -1,0 +1,157 @@
+"""The paper's own evaluation networks, scaled to this container:
+ResNet-style and MobileNet-v2-style CNNs with **im2col convolutions**
+(every conv is a plain [K*K*Cin, Cout] matmul), so the SME pipeline applies
+to exactly the tensors the paper compresses.
+
+Used by the paper-table benchmarks (Table II, Figs. 7-12) on a synthetic
+10-class image task; see ``benchmarks/_cnn_task.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Initializer
+
+__all__ = ["resnet_init", "resnet_apply", "mobilenet_init", "mobilenet_apply",
+           "conv_weight_matrices", "cnn_loss"]
+
+
+def _im2col(x, k: int, stride: int = 1, pad: int = 1):
+    """x:[B,H,W,C] -> patches [B,Ho,Wo,k*k*C]."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(jax.lax.slice(
+                xp, (0, di, dj, 0),
+                (b, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(x, w, k: int, stride: int = 1, pad: int = 1):
+    """im2col conv: w is [k*k*Cin, Cout] — an SME-compressible matrix."""
+    cols = _im2col(x, k, stride, pad)
+    return cols @ w.astype(x.dtype)
+
+
+def _bn_apply(x, p):
+    # simple trainable scale/shift (batch-independent: "norm-free" style)
+    return x * p["g"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+def _bn_init(init, c):
+    return {"g": init.ones((c,)), "b": init.zeros((c,))}
+
+
+# --------------------------------------------------------------- ResNet-18
+def resnet_init(rng, widths=(32, 64, 128, 256), blocks=(2, 2, 2, 2),
+                in_ch=3, n_classes=10):
+    init = Initializer(rng)
+    p: Dict[str, Any] = {
+        "stem": {"w": init.normal((3 * 3 * in_ch, widths[0]))},
+        "stem_bn": _bn_init(init, widths[0]),
+        "fc": {"w": init.normal((widths[-1], n_classes)), "b": init.zeros((n_classes,))},
+    }
+    c_in = widths[0]
+    for s, (c, n) in enumerate(zip(widths, blocks)):
+        for i in range(n):
+            stride = 2 if (i == 0 and s > 0) else 1
+            blk = {
+                "conv1": {"w": init.normal((3 * 3 * c_in, c))},
+                "bn1": _bn_init(init, c),
+                "conv2": {"w": init.normal((3 * 3 * c, c))},
+                "bn2": _bn_init(init, c),
+            }
+            if stride != 1 or c_in != c:
+                blk["proj"] = {"w": init.normal((c_in, c))}
+            p[f"s{s}b{i}"] = blk
+            c_in = c
+    return p
+
+
+def resnet_apply(p, x, widths=(32, 64, 128, 256), blocks=(2, 2, 2, 2)):
+    x = jax.nn.relu(_bn_apply(conv2d(x, p["stem"]["w"], 3), p["stem_bn"]))
+    c_prev = widths[0]
+    for s, (c, n) in enumerate(zip(widths, blocks)):
+        for i in range(n):
+            stride = 2 if (i == 0 and s > 0) else 1
+            blk = p[f"s{s}b{i}"]
+            h = jax.nn.relu(_bn_apply(conv2d(x, blk["conv1"]["w"], 3, stride), blk["bn1"]))
+            h = _bn_apply(conv2d(h, blk["conv2"]["w"], 3), blk["bn2"])
+            sc = x
+            if "proj" in blk:
+                sc = x[:, ::stride, ::stride] @ blk["proj"]["w"].astype(x.dtype)
+            x = jax.nn.relu(h + sc)
+            c_prev = c
+    x = x.mean(axis=(1, 2))
+    return x @ p["fc"]["w"].astype(x.dtype) + p["fc"]["b"].astype(x.dtype)
+
+
+# ----------------------------------------------------------- MobileNet-v2
+def mobilenet_init(rng, widths=(16, 24, 40, 80), expand=4, in_ch=3, n_classes=10):
+    init = Initializer(rng)
+    p: Dict[str, Any] = {
+        "stem": {"w": init.normal((3 * 3 * in_ch, widths[0]))},
+        "stem_bn": _bn_init(init, widths[0]),
+        "fc": {"w": init.normal((widths[-1], n_classes)), "b": init.zeros((n_classes,))},
+    }
+    c_in = widths[0]
+    for s, c in enumerate(widths):
+        e = c_in * expand
+        p[f"ir{s}"] = {
+            "pw1": {"w": init.normal((c_in, e))},            # pointwise expand
+            "dw": {"w": init.normal((3 * 3, e), stddev=0.2)},  # depthwise
+            "bn": _bn_init(init, e),
+            "pw2": {"w": init.normal((e, c))},               # pointwise project
+        }
+        c_in = c
+    return p
+
+
+def _depthwise(x, w, k=3, stride=1, pad=1):
+    """w: [k*k, C] depthwise taps."""
+    b, h, ww, c = x.shape
+    cols = _im2col(x, k, stride, pad)                        # [B,Ho,Wo,k*k*C]
+    ho, wo = cols.shape[1], cols.shape[2]
+    cols = cols.reshape(b, ho, wo, k * k, c)
+    return (cols * w.astype(x.dtype)[None, None, None]).sum(3)
+
+
+def mobilenet_apply(p, x, widths=(16, 24, 40, 80), expand=4):
+    x = jax.nn.relu(_bn_apply(conv2d(x, p["stem"]["w"], 3), p["stem_bn"]))
+    c_in = widths[0]
+    for s, c in enumerate(widths):
+        blk = p[f"ir{s}"]
+        stride = 2 if s > 0 else 1
+        h = jax.nn.relu6(x @ blk["pw1"]["w"].astype(x.dtype))
+        h = jax.nn.relu6(_bn_apply(_depthwise(h, blk["dw"]["w"], 3, stride), blk["bn"]))
+        h = h @ blk["pw2"]["w"].astype(x.dtype)
+        x = h if (stride != 1 or c_in != c) else x + h
+        c_in = c
+    x = x.mean(axis=(1, 2))
+    return x @ p["fc"]["w"].astype(x.dtype) + p["fc"]["b"].astype(x.dtype)
+
+
+def conv_weight_matrices(params) -> List[Tuple[str, np.ndarray]]:
+    """All SME-compressible 2-D weight matrices of a CNN param tree."""
+    out = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        names = "/".join(str(getattr(k, "key", k)) for k in path)
+        if hasattr(leaf, "ndim") and leaf.ndim == 2 and "fc" not in names:
+            out.append((names, np.asarray(leaf)))
+    return out
+
+
+def cnn_loss(apply_fn, params, images, labels):
+    logits = apply_fn(params, images).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    return (lse - gold).mean()

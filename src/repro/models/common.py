@@ -1,0 +1,135 @@
+"""Shared model building blocks (pure functional, explicit param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Initializer", "rmsnorm", "layernorm", "linear", "mlp_init", "mlp_apply",
+    "rope_freqs", "apply_rope", "norm_init", "embed_init", "sinusoidal_pos",
+]
+
+
+class Initializer:
+    """Deterministic per-path param init: every leaf gets rng fold_in(path)."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape, stddev: Optional[float] = None) -> jax.Array:
+        if stddev is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            stddev = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(self._next(), shape, jnp.float32) * stddev
+                ).astype(self.dtype)
+
+    def zeros(self, shape) -> jax.Array:
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, shape) -> jax.Array:
+        return jnp.ones(shape, self.dtype)
+
+
+def norm_init(init: Initializer, d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"w": init.ones((d,))}
+    return {"w": init.ones((d,)), "b": init.zeros((d,))}
+
+
+def rmsnorm(x, p, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["w"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, p, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32)
+            + (p["b"].astype(jnp.float32) if "b" in p else 0.0)).astype(dt)
+
+
+def apply_norm(x, p, kind):
+    return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
+
+
+def linear(x, p):
+    we = p["w"]
+    if isinstance(we, dict) and "sme_codes" in we:
+        from repro.core.integrate import sme_dequant_jnp
+        w = sme_dequant_jnp(we, dtype=x.dtype)
+    else:
+        w = we.astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def linear_init(init: Initializer, d_in: int, d_out: int, bias: bool = False,
+                stddev: Optional[float] = None):
+    p = {"w": init.normal((d_in, d_out), stddev)}
+    if bias:
+        p["b"] = init.zeros((d_out,))
+    return p
+
+
+def embed_init(init: Initializer, vocab: int, d: int):
+    return {"w": init.normal((vocab, d), stddev=1.0)}
+
+
+def mlp_init(init: Initializer, d: int, d_ff: int, act: str = "swiglu"):
+    if act == "swiglu":
+        return {
+            "wi": linear_init(init, d, d_ff),
+            "wg": linear_init(init, d, d_ff),
+            "wo": linear_init(init, d_ff, d),
+        }
+    return {"wi": linear_init(init, d, d_ff, bias=True),
+            "wo": linear_init(init, d_ff, d, bias=True)}
+
+
+def mlp_apply(x, p, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(linear(x, p["wg"])) * linear(x, p["wi"])
+    else:
+        h = jax.nn.gelu(linear(x, p["wi"]))
+    return linear(h, p["wo"])
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    ang = ang[..., None, :]                             # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int) -> jax.Array:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch is per *group* (= one batch row) with static capacity
+``C = ceil(S * top_k / E * capacity_factor)`` — fully static shapes, so it
+compiles deterministically and shards as:
+
+  * expert weights [E, D, F]: E on the ``model`` mesh axis (EP) when
+    ``E % model_size == 0``, else F on ``model`` (expert-TP, e.g. Mixtral's
+    8 experts on a 16-wide model axis);
+  * token/dispatch buffers: batch on ``data``.
+
+Overflowing tokens (> capacity) are dropped (standard GShard semantics);
+their combine weight is zeroed so the residual path carries them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, linear_init
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(seq: int, cfg) -> int:
+    cap = int(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor + 0.999)
+    return max(cap, 1)
+
+
+def moe_init(init: Initializer, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_dff
+    p = {
+        "router": linear_init(init, d, e, stddev=0.02),
+        "wi": init.normal((e, d, f)),
+        "wg": init.normal((e, d, f)),
+        "wo": init.normal((e, f, d), stddev=1.0 / (f ** 0.5)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.expert_dff * cfg.n_shared_experts
+        p["shared"] = {
+            "wi": linear_init(init, d, fs),
+            "wg": linear_init(init, d, fs),
+            "wo": linear_init(init, fs, d),
+        }
+    return p
+
+
+def _group_dispatch(xg, idx, wgt, n_experts: int, capacity: int):
+    """xg:[S,D] idx/wgt:[S,k] -> (buf [E,C,D], slot [S*k], keep [S*k])."""
+    s, d = xg.shape
+    k = idx.shape[-1]
+    flat_e = idx.reshape(-1)
+    oh = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, capacity)            # overflow -> scratch slot
+    tok = jnp.arange(s * k) // k
+    buf = jnp.zeros((n_experts, capacity + 1, d), xg.dtype)
+    buf = buf.at[flat_e, slot].set(xg[tok])
+    return buf[:, :capacity], flat_e, slot, keep
+
+
+def moe_apply(p, x, cfg, group_size: int = 2048):
+    """x: [B, S, D] -> [B, S, D].
+
+    Dispatch groups are sequence segments of at most ``group_size`` tokens:
+    capacity (and the [E, C, F] expert-hidden buffers) scale with the
+    segment, not the full 32k sequence — the standard group-size lever."""
+    b0, s0, d = x.shape
+    g = min(group_size, s0)
+    pad = (-s0) % g
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    x = x.reshape(b0 * (x.shape[1] // g), g, d)
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]["w"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    wgt, idx = jax.lax.top_k(probs, k)               # [B,S,k]
+    wgt = wgt / jnp.maximum(wgt.sum(-1, keepdims=True), 1e-9)
+
+    def expert_w(name):
+        q = p[name]
+        if isinstance(q, dict) and "sme_codes" in q:
+            from repro.core.integrate import sme_dequant_jnp
+            return sme_dequant_jnp(q, dtype=x.dtype)
+        return q.astype(x.dtype)
+
+    def per_group(xg, idxg, wg_):
+        buf, flat_e, slot, keep = _group_dispatch(xg, idxg, wg_, e, cap)
+        # expert SwiGLU, batched over E
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, expert_w("wg")))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, expert_w("wi"))
+        out = jnp.einsum("ecf,efd->ecd", h, expert_w("wo"))
+        out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))  # scratch slot reads 0
+        y_tok = out[flat_e, slot]                     # [S*k, D]
+        y_tok = y_tok * (keep * wg_.reshape(-1))[:, None].astype(x.dtype)
+        return y_tok.reshape(s, k, d).sum(axis=1)
+
+    if s > 1:
+        # sequential over groups: one group's [E, C, F] buffers live at a
+        # time (prefill/train memory); decode (s==1) stays vmapped.
+        y = jax.lax.map(jax.checkpoint(lambda a: per_group(*a)),
+                        (x, idx, wgt))
+    else:
+        y = jax.vmap(per_group)(x, idx, wgt)
+    y = y.reshape(b0, -1, d)[:, :s0]
+    x = x.reshape(b0, -1, d)[:, :s0]
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["wg"]["w"].astype(x.dtype))
+        hs = hs * (x @ sh["wi"]["w"].astype(x.dtype))
+        y = y + hs @ sh["wo"]["w"].astype(x.dtype)
+    # aux load-balancing loss (GShard): returned via aux dict by caller if needed
+    return y

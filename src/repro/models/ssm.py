@@ -1,0 +1,373 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and xLSTM (mLSTM + sLSTM).
+
+All three support (a) full-sequence apply for train/prefill and (b) O(1)
+single-step decode with an explicit state — which is why their architectures
+run the ``long_500k`` cell (DESIGN.md §4).
+
+* Mamba: selective SSM; the full-sequence path is a ``lax.scan`` over time
+  (one traced step — compile-friendly at any depth).
+* mLSTM: matrix-memory LSTM; full-sequence path is the *chunkwise* form
+  (quadratic only within a chunk, O(S) overall — 32k prefill never builds
+  an [S, S] tensor); decode is the recurrent form.
+* sLSTM: scalar-memory recurrent LSTM with block-diagonal recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, linear, linear_init
+
+__all__ = [
+    "mamba_init", "mamba_apply", "mamba_decode",
+    "mlstm_init", "mlstm_apply", "mlstm_decode",
+    "slstm_init", "slstm_apply", "slstm_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width w) used by mamba
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b):
+    """x:[B,S,C], w:[K,C] -> [B,S,C]; state-free full-sequence form."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return jax.nn.silu(y + b.astype(x.dtype))
+
+
+def _causal_conv_step(x1, conv_state, w, b):
+    """x1:[B,1,C]; conv_state:[B,K-1,C] (previous inputs)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x1], axis=1)        # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x1.dtype))[:, None]
+    return jax.nn.silu(y + b.astype(x1.dtype)), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_in, dt_rank, cfg.ssm_state
+
+
+def mamba_init(init: Initializer, cfg):
+    d = cfg.d_model
+    d_in, dt_rank, n = _mamba_dims(cfg)
+    return {
+        "in_proj": linear_init(init, d, 2 * d_in),
+        "conv_w": init.normal((cfg.ssm_conv, d_in), stddev=0.2),
+        "conv_b": init.zeros((d_in,)),
+        "x_proj": linear_init(init, d_in, dt_rank + 2 * n),
+        "dt_w": linear_init(init, dt_rank, d_in),
+        "dt_bias": init.normal((d_in,), stddev=0.1),
+        "A_log": init.normal((d_in, n), stddev=0.5),
+        "D": init.ones((d_in,)),
+        "out_proj": linear_init(init, d_in, d),
+    }
+
+
+def _mamba_core(p, xc, z, cfg, h0):
+    """xc (post conv): [B,S,d_in]; returns y [B,S,d_in] and final h."""
+    d_in, dt_rank, n = _mamba_dims(cfg)
+    bsz, s, _ = xc.shape
+    proj = linear(xc, p["x_proj"])
+    dt_r, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(linear(dt_r, p["dt_w"]) + p["dt_bias"].astype(xc.dtype))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # [d_in, n]
+
+    def step(h, args):
+        u_t, dt_t, b_t, c_t = args
+        u_t = u_t.astype(jnp.float32)
+        dt_t = dt_t.astype(jnp.float32)
+        b_t = b_t.astype(jnp.float32)
+        c_t = c_t.astype(jnp.float32)
+        da = jnp.exp(dt_t[..., None] * a[None])               # [B,d_in,n]
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y_t = (h * c_t[:, None, :]).sum(-1)
+        return h, y_t
+
+    # two-level scan: outer over chunks (boundary states saved for the
+    # backward), inner over time inside a rematerialized chunk — training
+    # memory is O(S/chunk) states instead of O(S) (34GB -> ~0.5GB at 4k).
+    chunk = min(256, s)
+    pad = (-s) % chunk
+    def _c(t):  # [B,S,*] -> [nc, chunk, B, *] time-major chunks
+        tp = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        tm = jnp.moveaxis(tp, 1, 0)
+        return tm.reshape(-1, chunk, *tm.shape[1:])
+
+    xs = (_c(xc), _c(dt), _c(bmat), _c(cmat))
+
+    @jax.checkpoint
+    def chunk_step(h, args):
+        h, ys = jax.lax.scan(step, h, args)
+        return h, ys
+
+    h, ys = jax.lax.scan(chunk_step, h0, xs)
+    ys = ys.reshape(-1, *ys.shape[2:])[:s]                    # [S,B,d_in]
+    y = jnp.moveaxis(ys, 0, 1).astype(xc.dtype)               # [B,S,d_in]
+    y = y + xc * p["D"].astype(xc.dtype)
+    return y * jax.nn.silu(z), h
+
+
+def mamba_apply(p, x, cfg, want_state: bool = False):
+    """x:[B,S,D] -> (y, state|None). state=(conv_state, h)."""
+    d_in, _, n = _mamba_dims(cfg)
+    xz = linear(x, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xr, p["conv_w"], p["conv_b"])
+    h0 = jnp.zeros((x.shape[0], d_in, n), jnp.float32)
+    y, h = _mamba_core(p, xc, z, cfg, h0)
+    y = linear(y, p["out_proj"])
+    state = None
+    if want_state:
+        k = cfg.ssm_conv
+        conv_state = jnp.pad(xr, ((0, 0), (max(k - 1 - x.shape[1], 0), 0), (0, 0))
+                             )[:, -(k - 1):]
+        state = {"conv": conv_state, "h": h}
+    return y, state
+
+
+def mamba_decode(p, x1, state, cfg):
+    """x1:[B,1,D] one step."""
+    d_in, dt_rank, n = _mamba_dims(cfg)
+    xz = linear(x1, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv_step(xr, state["conv"], p["conv_w"], p["conv_b"])
+    y, h = _mamba_core(p, xc, z, cfg, state["h"])
+    y = linear(y, p["out_proj"])
+    return y, {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model       # projection factor 2
+    nh = cfg.n_heads
+    return d_in, nh, d_in // nh
+
+
+def mlstm_init(init: Initializer, cfg):
+    d = cfg.d_model
+    d_in, nh, dh = _mlstm_dims(cfg)
+    return {
+        "up": linear_init(init, d, 2 * d_in),
+        # block-diagonal per-head q/k/v
+        "q": init.normal((nh, dh, dh)),
+        "k": init.normal((nh, dh, dh)),
+        "v": init.normal((nh, dh, dh)),
+        "ig": linear_init(init, d_in, nh, stddev=0.02),
+        "fg": linear_init(init, d_in, nh, stddev=0.02),
+        "norm_w": init.ones((d_in,)),
+        "down": linear_init(init, d_in, d),
+    }
+
+
+def _mlstm_qkv(p, xr, nh, dh):
+    b, s, _ = xr.shape
+    xh = xr.reshape(b, s, nh, dh)
+    q = jnp.einsum("bsnd,nde->bsne", xh, p["q"].astype(xr.dtype))
+    k = jnp.einsum("bsnd,nde->bsne", xh, p["k"].astype(xr.dtype)) / (dh ** 0.5)
+    v = jnp.einsum("bsnd,nde->bsne", xh, p["v"].astype(xr.dtype))
+    ig = linear(xr, p["ig"]).astype(jnp.float32)             # [B,S,NH] log-space
+    fg = jax.nn.log_sigmoid(linear(xr, p["fg"]).astype(jnp.float32))
+    return q, k, v, ig, fg
+
+
+def _mlstm_chunk_scan(q, k, v, ig, fg, chunk: int, state0):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: [B,S,NH,dh] (k pre-scaled); ig/fg: [B,S,NH] log gates.
+    state0 = (C [B,NH,dh,dh], n [B,NH,dh], m [B,NH]).
+    """
+    b, s, nh, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, nh, dh)
+    kc = k.reshape(b, nc, chunk, nh, dh)
+    vc = v.reshape(b, nc, chunk, nh, dh)
+    igc = ig.reshape(b, nc, chunk, nh)
+    fgc = fg.reshape(b, nc, chunk, nh)
+
+    @jax.checkpoint
+    def chunk_step(carry, i):
+        c_st, n_st, m_st = carry                            # [B,NH,dh,dh],[B,NH,dh],[B,NH]
+        qi, ki, vi = qc[:, i], kc[:, i], vc[:, i]           # [B,L,NH,dh]
+        a_i, f_i = igc[:, i], fgc[:, i]                     # [B,L,NH]
+        bcum = jnp.cumsum(f_i, axis=1)                      # [B,L,NH] decay from chunk start
+        # stabilizers
+        a_min_b = a_i - bcum                                # [B,L,NH]
+        run_max = jax.lax.cummax(a_min_b, axis=1)
+        m_t = bcum + jnp.maximum(m_st[:, None], run_max)    # [B,L,NH]
+        # intra-chunk scores: S_ts = q_t.k_s * exp(b_t - b_s + a_s - m_t)
+        qf = qi.astype(jnp.float32)
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        logits = jnp.einsum("btnd,bsnd->bnts", qf, kf)
+        dec = bcum[:, :, None, :] - bcum[:, None, :, :] + a_i[:, None, :, :]
+        dec = jnp.transpose(dec, (0, 3, 1, 2))              # [B,NH,L,L]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dgate = jnp.where(mask[None, None], dec - m_t.transpose(0, 2, 1)[..., None], -jnp.inf)
+        s_intra = logits * jnp.exp(dgate)
+        num_intra = jnp.einsum("bnts,bsnd->btnd", s_intra, vf)
+        den_intra = s_intra.sum(-1).transpose(0, 2, 1)      # [B,L,NH]
+        # inter-chunk: exp(b_t + m_prev - m_t) * q_t . C_prev
+        w_inter = jnp.exp(bcum + m_st[:, None] - m_t)       # [B,L,NH]
+        num_inter = jnp.einsum("btnd,bnde->btne", qf, c_st) * w_inter[..., None]
+        den_inter = jnp.einsum("btnd,bnd->btn", qf, n_st) * w_inter
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to chunk end
+        b_l = bcum[:, -1]                                   # [B,NH]
+        m_new = jnp.maximum(m_st + b_l, (a_min_b + b_l[:, None]).max(axis=1))
+        w_old = jnp.exp(m_st + b_l - m_new)                 # [B,NH]
+        w_tok = jnp.exp(a_min_b + b_l[:, None] - m_new[:, None])  # [B,L,NH]
+        c_new = c_st * w_old[..., None, None] + jnp.einsum(
+            "bsnd,bsne,bsn->bnde", kf, vf, w_tok)
+        n_new = n_st * w_old[..., None] + jnp.einsum("bsnd,bsn->bnd", kf, w_tok)
+        return (c_new, n_new, m_new), h
+
+    (c_st, n_st, m_st), hs = jax.lax.scan(chunk_step, state0, jnp.arange(nc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, dh)
+    return h, (c_st, n_st, m_st)
+
+
+def mlstm_apply(p, x, cfg, want_state: bool = False, chunk: int = 1024):
+    d_in, nh, dh = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    up = linear(x, p["up"])
+    xr, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_qkv(p, xr, nh, dh)
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)))
+    state0 = (
+        jnp.zeros((b, nh, dh, dh), jnp.float32),
+        jnp.zeros((b, nh, dh), jnp.float32),
+        jnp.zeros((b, nh), jnp.float32),
+    )
+    h, state = _mlstm_chunk_scan(q, k, v, ig, fg, chunk, state0)
+    h = h[:, :s].reshape(b, s, d_in).astype(x.dtype)
+    h = h * p["norm_w"].astype(x.dtype)                      # per-channel norm scale
+    y = linear(h * jax.nn.silu(z), p["down"])
+    return y, (state if want_state else None)
+
+
+def mlstm_decode(p, x1, state, cfg):
+    """Recurrent single step (exact mLSTM recurrence)."""
+    d_in, nh, dh = _mlstm_dims(cfg)
+    b = x1.shape[0]
+    up = linear(x1, p["up"])
+    xr, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_qkv(p, xr, nh, dh)
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    a_t, f_t = ig[:, 0], fg[:, 0]                            # [B,NH]
+    c_st, n_st, m_st = state
+    m_new = jnp.maximum(f_t + m_st, a_t)
+    wf = jnp.exp(f_t + m_st - m_new)
+    wi = jnp.exp(a_t - m_new)
+    c_new = c_st * wf[..., None, None] + jnp.einsum("bnd,bne->bnde", kf, vf) * wi[..., None, None]
+    n_new = n_st * wf[..., None] + kf * wi[..., None]
+    num = jnp.einsum("bnd,bnde->bne", qf, c_new)
+    den = jnp.einsum("bnd,bnd->bn", qf, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, 1, d_in).astype(x1.dtype) * p["norm_w"].astype(x1.dtype)
+    y = linear(h * jax.nn.silu(z), p["down"])
+    return y, (c_new, n_new, m_new)
+
+
+def mlstm_state_init(cfg, batch: int):
+    _, nh, dh = _mlstm_dims(cfg)
+    return (
+        jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        jnp.zeros((batch, nh, dh), jnp.float32),
+        jnp.zeros((batch, nh), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_init(init: Initializer, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    return {
+        "wx": linear_init(init, d, 4 * d),                  # i,f,z,o from input
+        "r": init.normal((4, nh, dh, dh), stddev=0.5 / (dh ** 0.5)),
+        "b": init.zeros((4, d)),
+        # post-block gated FFN (pf = 4/3)
+        "ff_wi": linear_init(init, d, (4 * d) // 3),
+        "ff_wg": linear_init(init, d, (4 * d) // 3),
+        "ff_wo": linear_init(init, (4 * d) // 3, d),
+    }
+
+
+def _slstm_scan(p, wx, cfg, state0):
+    """wx: precomputed input projections [B,S,4D]."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b = wx.shape[0]
+    r = p["r"].astype(jnp.float32)
+    bias = p["b"].astype(jnp.float32).reshape(4, d)
+
+    def step(carry, t):
+        c, n, h, m = carry                                   # all [B,D] f32
+        hh = h.reshape(b, nh, dh)
+        rec = jnp.einsum("bnd,gnde->gbne", hh, r).reshape(4, b, d)
+        raw = wx[:, t].astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) \
+            + rec + bias[:, None]
+        i_r, f_r, z_r, o_r = raw
+        m_new = jnp.maximum(f_r + m, i_r)
+        i_g = jnp.exp(i_r - m_new)
+        f_g = jnp.exp(f_r + m - m_new)
+        c = f_g * c + i_g * jnp.tanh(z_r)
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, state0, jnp.arange(wx.shape[1]))
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)
+
+
+def slstm_state_init(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z - 10.0)
+
+
+def slstm_apply(p, x, cfg, want_state: bool = False):
+    b, s, d = x.shape
+    wx = linear(x, p["wx"])
+    hs, state = _slstm_scan(p, wx, cfg, slstm_state_init(cfg, b))
+    y = hs.astype(x.dtype)
+    ff = jax.nn.silu(linear(y, {"w": p["ff_wg"]["w"]})) * linear(y, {"w": p["ff_wi"]["w"]})
+    y = linear(ff, {"w": p["ff_wo"]["w"]})
+    return y, (state if want_state else None)
+
+
+def slstm_decode(p, x1, state, cfg):
+    wx = linear(x1, p["wx"])
+    hs, state = _slstm_scan(p, wx, cfg, state)
+    y = hs.astype(x1.dtype)
+    ff = jax.nn.silu(linear(y, {"w": p["ff_wg"]["w"]})) * linear(y, {"w": p["ff_wi"]["w"]})
+    y = linear(ff, {"w": p["ff_wo"]["w"]})
+    return y, state

@@ -1,0 +1,1 @@
+from .optim import adamw, sgd, lion, cosine_schedule, linear_warmup, clip_by_global_norm, Optimizer

@@ -1,0 +1,82 @@
+"""Gradient compression with error feedback for cross-pod all-reduce.
+
+The pod axis crosses the slow inter-pod links (DCI), so the per-step
+gradient all-reduce is the dominant cross-pod collective.  int8 uniform
+quantization with error feedback (residual carried to the next step) cuts
+that traffic 4x vs f32 / 2x vs bf16 with provably-convergent SGD behavior
+(Karimireddy et al., 2019 "EF-SGD").
+
+Usage inside a pjit'd step (see train/loop.py wiring):
+
+    g_q, new_resid = compress_tree(grads, resid)
+    g_q = jax.lax.pmean(g_q, 'pod')   # or GSPMD-inserted via shardings
+    grads = decompress_tree(g_q)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
+           "decompress_tree", "ef_allreduce"]
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, resid):
+    """Error-feedback compress: q(g + resid); residual = input - deq(q).
+
+    Returns ({"q": int8 tree, "scale": f32 tree}, new_resid)."""
+    flat, tdef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(resid)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat, rflat):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        qs.append(q)
+        ss.append(s)
+        rs.append(corrected - dequantize_int8(q, s))
+    return ({"q": jax.tree.unflatten(tdef, qs),
+             "scale": jax.tree.unflatten(tdef, ss)},
+            jax.tree.unflatten(tdef, rs))
+
+
+def decompress_tree(packed):
+    return jax.tree.map(dequantize_int8, packed["q"], packed["scale"])
+
+
+def zeros_like_resid(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_allreduce(grads, resid, axis_name: str):
+    """Error-feedback int8 all-reduce over ``axis_name`` (use inside
+    shard_map/pmap contexts; under plain GSPMD prefer sharding-driven
+    psum of the int8 tree)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        # all-reduce int32-accumulated int8 values and mean of scales
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale = jax.lax.pmean(s, axis_name)
+        deq = summed.astype(jnp.float32) * scale / jax.lax.psum(1, axis_name)
+        new_r = corrected - dequantize_int8(q, s)
+        return deq, new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(resid)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

@@ -1,0 +1,221 @@
+"""Sharding rules: map param/cache/batch pytrees -> PartitionSpecs.
+
+Axes (DESIGN.md §5):
+  * ``pod``   — data parallelism across pods (gradient all-reduce crosses
+                pods once per step; FSDP never crosses pods);
+  * ``data``  — data parallelism + FSDP (ZeRO-3 weight sharding) + SP
+                (sequence sharding for batch<data decode);
+  * ``model`` — tensor/expert parallelism (heads, d_ff, experts, vocab).
+
+Every rule checks divisibility and silently drops an axis that does not
+divide the dimension (e.g. whisper's vocab 51865 stays replicated) — the
+dry-run proves whatever remains compiles and fits.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_sharding", "cache_sharding", "batch_sharding",
+           "dp_axes", "axis_size", "tree_shardings", "replicated"]
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = int(np.prod([axis_size(mesh, a) for a in axes]))
+    return dim % n == 0
+
+
+def _spec(mesh: Mesh, shape, *axes) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    clean = []
+    for dim, ax in zip(shape, axes):
+        clean.append(ax if (ax and _fits(dim, mesh, ax)) else None)
+    return P(*clean)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# ---------------------------------------------------------------- params
+
+def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool) -> P:
+    nd = len(shape)
+    d = "data" if fsdp else None
+    lead = max(0, 0)
+
+    def pad(spec_axes):
+        """prepend Nones for stacked superblock leading dims."""
+        extra = nd - len(spec_axes)
+        return _spec(mesh, shape, *([None] * extra + list(spec_axes)))
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # SME packed leaves: shard the tile-internal dims (always 128, so any
+    # mesh divides); tile-count dims (nr/nc) rarely divide the axis sizes.
+    if name == "sme_codes":                 # [..., nr, nc, tr, tc]
+        return pad([None, d, None, "model"])
+    if name == "sme_rowexp":                # [..., nr, nc, tr]
+        return pad([None, d, "model"])
+    if name == "sme_sign":                  # [..., K, ceil(N/8)]
+        return pad(["model", d])
+    if name == "sme_scale":                 # [..., 1, N]
+        return pad([None, "model"])
+    if "embed" in path:
+        return pad(["model", d])
+    if "lm_head" in path or "patch_proj" in path:
+        return pad([d, "model"])
+    if parent in ("router",):
+        return pad([None, None])
+    # MoE experts [E, D, F] / [E, F, D]
+    if parent == "" and name in ("wi", "wg", "wo") and nd >= 3:
+        pass
+    if name in ("wi", "wg") and nd >= 3 and "shared" not in path:
+        e = shape[-3]
+        if e % axis_size(mesh, "model") == 0:
+            return pad(["model", d, None])
+        return pad([None, d, "model"])
+    if name == "wo" and nd >= 3 and "shared" not in path:
+        e = shape[-3]
+        if e % axis_size(mesh, "model") == 0:
+            return pad(["model", None, d])
+        return pad([None, "model", d])
+    # attention / mlp 2-D mats
+    if name == "w" or name in ("wi", "wg", "wo"):
+        if parent in ("o", "wo", "out_proj", "down", "dt_w", "ff_wo") or name == "wo":
+            return pad(["model", d])
+        if parent in ("x_proj",):
+            return pad(["model", None])
+        if nd >= 2:
+            return pad([d, "model"])
+    if name == "b" and parent in ("q", "k", "v", "o", "wi", "wo", "up", "wx"):
+        return pad(["model"])
+    if name in ("A_log",):
+        return pad(["model", None])
+    if name in ("conv_w",):
+        return pad([None, "model"])
+    if name in ("conv_b", "dt_bias", "D", "norm_w"):
+        return pad(["model"])
+    if parent in ("ig", "fg"):
+        return pad(["model", None]) if nd >= 2 else pad([None])
+    if name in ("q", "k", "v") and nd >= 3:            # mlstm block-diag [NH,dh,dh]
+        return pad([None, None, "model"])
+    if name == "r":                                    # slstm recurrence
+        return pad([None] * nd)
+    return P(*([None] * nd))                           # norms & misc: replicate
+
+
+def param_sharding(mesh: Mesh, abstract_params, fsdp: bool = True,
+                   tp: bool = True):
+    """Tree of NamedShardings matching an abstract param tree.
+
+    ``tp=False`` drops the 'model' axis from every param spec (pure-DP mode
+    for small models: params replicated over model, FSDP over data)."""
+    def one(path, leaf):
+        spec = _param_spec(mesh, _path_str(path), leaf.shape, fsdp)
+        if not tp:
+            spec = P(*[None if ax == "model" else
+                       (tuple(a for a in ax if a != "model") or None)
+                       if isinstance(ax, tuple) else ax for ax in spec])
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+# ---------------------------------------------------------------- caches
+
+def _cache_spec(mesh: Mesh, path: str, shape, batch: int) -> P:
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    dpn = int(np.prod([axis_size(mesh, a) for a in dp]))
+    batch_ax: Any = dp if (batch % max(dpn, 1) == 0 and dpn > 1) else (
+        "data" if batch % axis_size(mesh, "data") == 0 else None)
+    # SP-decode: sequence dim of attention caches shards over 'model'
+    # (uniform for all head counts); batch==1 adds 'data' to the seq shard.
+    sp: Any = ("model",) if batch_ax is not None else (
+        ("data", "model") if batch == 1 else ("model",))
+    name = path.split("/")[-1]
+
+    def pad(axes_from_right):
+        """axes_from_right aligns to the trailing dims; lead dims None."""
+        extra = nd - len(axes_from_right)
+        return _spec(mesh, shape, *([None] * extra + list(axes_from_right)))
+
+    if name in ("k", "v") and nd >= 4:                  # [..., B, S|W, KV, hd]
+        return pad([batch_ax, sp, None, None])
+    if name in ("c", "k_pe"):                           # MLA [..., B, S, lora]
+        return pad([batch_ax, sp, None])
+    if name == "conv":                                  # mamba [..., B, k-1, d_in]
+        return pad([batch_ax, None, "model"])
+    if name == "h":                                     # mamba [..., B, d_in, n]
+        return pad([batch_ax, "model", None])
+    # tuple states (mlstm C/n/m, slstm c/n/h/m) — shape-based
+    if nd >= 4 and shape[-1] == shape[-2]:              # mlstm C [..,B,NH,dh,dv]
+        dh_ax = "data" if batch_ax is None else None    # batch==1: dh over data
+        return pad([batch_ax, None, dh_ax, "model"])
+    if nd >= 3:                                         # mlstm n [..,B,NH,dh]
+        return pad([batch_ax, None, "model"])
+    if nd == 2:                                         # slstm [B, D] or m [B,NH]
+        return pad([batch_ax, "model"])
+    return P(*([None] * nd))
+
+
+def cache_sharding(mesh: Mesh, abstract_cache, batch: int):
+    def one(path, leaf):
+        spec = _cache_spec(mesh, _path_str(path), leaf.shape, batch)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+# ---------------------------------------------------------------- batches
+
+def batch_sharding(mesh: Mesh, abstract_batch, include_model: bool = False):
+    """Shard dim0 (global batch) over (pod, data[, model])."""
+    dp = dp_axes(mesh)
+    if include_model:
+        full = dp + ("model",)
+        fn = int(np.prod([axis_size(mesh, a) for a in full]))
+    dpn = int(np.prod([axis_size(mesh, a) for a in dp]))
+
+    def one(_, leaf):
+        b = leaf.shape[0]
+        ax: Any = None
+        if include_model and b % fn == 0:
+            ax = full
+        elif b % max(dpn, 1) == 0:
+            ax = dp
+        elif b % axis_size(mesh, "data") == 0:
+            ax = "data"
+        return NamedSharding(mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree_util.tree_map_with_path(one, abstract_batch)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)
+
+
+def tree_shardings(mesh: Mesh, *, params=None, cache=None, batch=None,
+                   batch_size: Optional[int] = None, fsdp: bool = True):
+    out = {}
+    if params is not None:
+        out["params"] = param_sharding(mesh, params, fsdp)
+    if cache is not None:
+        out["cache"] = cache_sharding(mesh, cache, batch_size or 1)
+    if batch is not None:
+        out["batch"] = batch_sharding(mesh, batch)
+    return out

@@ -1,0 +1,1 @@
+from .loop import make_train_step, train_loop, pick_microbatches

@@ -1,0 +1,79 @@
+"""Per-kernel validation: shape/dtype sweep, interpret-mode vs ref.py oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sme import sme_compress
+from repro.kernels.sme_spmm import sme_linear_from_weight, pack_operands, sme_linear
+from repro.kernels.sme_spmm.ref import sme_spmm_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _check(k, n, m, squeeze=1, n_bits=8, window=3, dtype=np.float32, tol=5e-5):
+    w = RNG.normal(0, 0.3, (k, n))
+    x = RNG.normal(0, 1, (m, k)).astype(dtype)
+    smew = sme_compress(w, n_bits=n_bits, window=window, squeeze=squeeze)
+    y = np.asarray(sme_linear_from_weight(jnp.asarray(x), smew))
+    y_ref = x.astype(np.float64) @ smew.dequant()
+    denom = max(np.abs(y_ref).max(), 1e-9)
+    rel = np.abs(y - y_ref).max() / denom
+    assert rel < tol, (k, n, m, squeeze, dtype, rel)
+
+
+@pytest.mark.parametrize("k,n", [(128, 128), (256, 384), (300, 500), (130, 129)])
+def test_shapes(k, n):
+    _check(k, n, m=9)
+
+
+@pytest.mark.parametrize("m", [1, 8, 17, 130])
+def test_batch_sizes(m):
+    _check(256, 256, m=m)
+
+
+@pytest.mark.parametrize("squeeze", [0, 1, 2, 3])
+def test_squeeze_depths(squeeze):
+    _check(256, 256, m=5, squeeze=squeeze)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 5e-5), (np.float16, 3e-3)])
+def test_dtypes(dtype, tol):
+    _check(256, 256, m=5, dtype=dtype, tol=tol)
+
+
+@pytest.mark.parametrize("n_bits,window", [(8, 3), (8, 2), (8, 4), (6, 3)])
+def test_quant_params(n_bits, window):
+    _check(256, 256, m=5, n_bits=n_bits, window=window)
+
+
+def test_block_sparse_skips_empty_tiles():
+    """Zero row-blocks produce empty tiles; kernel must skip them exactly."""
+    w = RNG.normal(0, 0.3, (512, 256))
+    w[128:384] = 0.0                      # two empty row-tiles per column
+    smew = sme_compress(w, squeeze=1)
+    assert int(smew.occupancy.sum()) < smew.grid[0] * smew.grid[1]
+    x = RNG.normal(0, 1, (5, 512)).astype(np.float32)
+    y = np.asarray(sme_linear_from_weight(jnp.asarray(x), smew))
+    y_ref = x.astype(np.float64) @ smew.dequant()
+    assert np.abs(y - y_ref).max() / np.abs(y_ref).max() < 5e-5
+
+
+def test_oracle_matches_unscaled_kernel_contract():
+    w = RNG.normal(0, 0.3, (256, 256))
+    smew = sme_compress(w, squeeze=1)
+    x = RNG.normal(0, 1, (4, 256))
+    y_contract = sme_spmm_ref(x, smew) * np.asarray(smew.scale)
+    y_full = x @ smew.dequant()
+    assert np.allclose(y_contract, y_full, atol=1e-10)
+
+
+def test_pack_once_run_many():
+    w = RNG.normal(0, 0.3, (256, 256))
+    smew = sme_compress(w, squeeze=1)
+    ops = pack_operands(smew)
+    for m in (3, 5):
+        x = jnp.asarray(RNG.normal(0, 1, (m, 256)), jnp.float32)
+        y = sme_linear(x, ops, n_bits=8, shape=smew.shape)
+        assert y.shape == (m, 256)
+        assert bool(jnp.isfinite(y).all())

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (task §ARCHITECTURES)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, get_smoke, SMOKE_SHAPE
+from repro.models import build_model, param_count
+
+RNG = jax.random.key(0)
+
+
+def make_batch(cfg, api, kind="train", b=2, s=32):
+    from repro.configs.base import ShapeConfig
+    sh = ShapeConfig("t", s, b, kind)
+    specs = api.input_specs(sh)
+    batch = {}
+    for k, v in specs.items():
+        kk = jax.random.fold_in(RNG, abs(hash(k)) % 997)
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(kk, v.shape, 0, cfg.vocab)
+        else:
+            batch[k] = jax.random.normal(kk, v.shape, jnp.float32).astype(v.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    assert param_count(params) > 0
+    batch = make_batch(cfg, api)
+    loss, grads = jax.jit(jax.value_and_grad(api.train_loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x7b", "xlstm-1.3b",
+                                  "deepseek-v2-lite-16b", "whisper-medium"])
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    b, s, s_max = 2, 12, 32
+    batch = make_batch(cfg, api, kind="prefill", b=b, s=s)
+    logits, caches = jax.jit(lambda p, bt: api.prefill(p, bt, s_max=s_max))(
+        params, batch)
+    assert logits.shape == (b, cfg.vocab)
+    pos0 = s + (cfg.n_frontend_tokens if cfg.frontend else 0)
+    if cfg.n_enc_layers:
+        pos0 = s  # decoder positions only
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    step = jax.jit(api.decode_step)
+    for t in range(3):
+        logits, caches = step(params, tok, caches, jnp.int32(pos0 + t))
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+def test_decode_matches_prefill_teacher_forcing():
+    """prefill(t[:n]) then decoding t[n:] must reproduce prefill(t[:n+k])'s
+    last-token logits — the KV cache path is consistent with the parallel
+    path."""
+    cfg = get_smoke("qwen1.5-0.5b")
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    toks = jax.random.randint(jax.random.fold_in(RNG, 5), (1, 10), 0, cfg.vocab)
+    s_max = 16
+    # full prefill over 10 tokens
+    full_logits, _ = jax.jit(lambda p, b: api.prefill(p, b, s_max=s_max))(
+        params, {"tokens": toks})
+    # prefill 7, decode tokens 7..9 (teacher forcing)
+    part_logits, caches = jax.jit(lambda p, b: api.prefill(p, b, s_max=s_max))(
+        params, {"tokens": toks[:, :7]})
+    step = jax.jit(api.decode_step)
+    logits = part_logits
+    for t in range(7, 10):
+        logits, caches = step(params, toks[:, t:t + 1], caches, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_swa_ring_cache_decode_consistency():
+    """Windowed (ring) cache decode == full-history prefill logits, for a
+    windowed arch (mixtral smoke, window=8)."""
+    cfg = get_smoke("mixtral-8x7b")
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    toks = jax.random.randint(jax.random.fold_in(RNG, 9), (1, 14), 0, cfg.vocab)
+    s_max = 32
+    full_logits, _ = jax.jit(lambda p, b: api.prefill(p, b, s_max=s_max))(
+        params, {"tokens": toks})
+    part_logits, caches = jax.jit(lambda p, b: api.prefill(p, b, s_max=s_max))(
+        params, {"tokens": toks[:, :9]})
+    step = jax.jit(api.decode_step)
+    logits = part_logits
+    for t in range(9, 14):
+        logits, caches = step(params, toks[:, t:t + 1], caches, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_vlm_patch_prepending():
+    cfg = get_smoke("llava-next-34b")
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    batch = make_batch(cfg, api, b=2, s=32)
+    assert "patches" in batch
+    assert batch["tokens"].shape[1] == 32 - cfg.n_frontend_tokens
+    loss = jax.jit(api.train_loss)(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_cnn_forward_shapes():
+    from repro.models.cnn import (resnet_init, resnet_apply, mobilenet_init,
+                                  mobilenet_apply)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 16, 16, 3)),
+                    jnp.float32)
+    pr = resnet_init(RNG, widths=(8, 16, 24, 32))
+    out = resnet_apply(pr, x, widths=(8, 16, 24, 32))
+    assert out.shape == (4, 10) and bool(jnp.isfinite(out).all())
+    pm = mobilenet_init(RNG, widths=(8, 12, 16, 24))
+    out = mobilenet_apply(pm, x, widths=(8, 12, 16, 24))
+    assert out.shape == (4, 10) and bool(jnp.isfinite(out).all())

@@ -1,0 +1,133 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    quantize, dequantize, code_value, squeeze_out, dequant_squeezed,
+    squeeze_error_bound, sme_quantize_mag,
+)
+from repro.models.attention import blockwise_attention
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n_bits=st.integers(4, 10),
+    window=st.integers(1, 5),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_sme_quant_error_bound(n_bits, window, seed):
+    """|v - q(v)| <= 2^-(L+S-1) relative step at the leading bit, i.e. the
+    representable grid's half-step; globally <= 2^-window."""
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(0, 1 - 2.0 ** -window, 50)
+    codes = sme_quantize_mag(v, n_bits, window)
+    vq = codes.astype(np.float64) * 2.0 ** -n_bits
+    # error per element: half of the last kept bit (<= 2^-window * v * ~1)
+    err = np.abs(v - vq)
+    assert (err <= np.maximum(v * 2.0 ** -(window - 0), 2.0 ** -n_bits)).all()
+
+
+@given(
+    window=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_window_invariant(window, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, (20, 20))
+    q = quantize(w, "sme", 8, window)
+    c = q.codes.astype(np.int64)
+    nz = c > 0
+    if nz.any():
+        lead = np.floor(np.log2(c[nz])).astype(np.int64)
+        low_mask = (1 << np.maximum(lead - window + 1, 0)) - 1
+        assert (c[nz] & low_mask == 0).all()
+
+
+@given(
+    x=st.integers(0, 4),
+    seed=st.integers(0, 500),
+)
+@settings(**SETTINGS)
+def test_squeeze_bound_property(x, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.5, (64, 64))
+    q = quantize(w, "sme", 8, 3)
+    sq = squeeze_out(q.codes, 8, x, tile=(32, 32))
+    err = np.abs(dequant_squeezed(sq) - code_value(q.codes, 8))
+    assert err.max() <= squeeze_error_bound(8, x) + 1e-12
+
+
+@given(
+    seq=st.integers(4, 48),
+    heads=st.sampled_from([2, 4]),
+    kv=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 5]),
+    block=st.sampled_from([4, 16]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15, deadline=None)
+def test_blockwise_attention_matches_naive(seq, heads, kv, window, block, seed):
+    """Flash-style blockwise attention == naive masked softmax attention."""
+    rng = np.random.default_rng(seed)
+    hd = 8
+    q = jnp.asarray(rng.normal(0, 1, (2, seq, heads, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, seq, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, seq, kv, hd)), jnp.float32)
+    out = blockwise_attention(q, jnp.repeat(k, heads // kv, 2),
+                              jnp.repeat(v, heads // kv, 2),
+                              causal=True, window=window,
+                              block_q=block, block_k=block)
+    # naive reference
+    kk = np.repeat(np.asarray(k), heads // kv, 2)
+    vv = np.repeat(np.asarray(v), heads // kv, 2)
+    qq = np.asarray(q)
+    s = np.einsum("bqhd,bkhd->bhqk", qq, kk) / np.sqrt(hd)
+    i, j = np.arange(seq)[:, None], np.arange(seq)[None, :]
+    mask = i >= j
+    if window:
+        mask &= (i - j) < window
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    ref = np.einsum("bhqk,bkhd->bqhd", p, vv)
+    assert np.abs(np.asarray(out) - ref).max() < 2e-3
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_chunkwise_equals_recurrent(seed):
+    """Chunkwise-parallel mLSTM == step-by-step recurrent form."""
+    from repro.configs import scale_down, ARCHS
+    from repro.models import ssm
+    from repro.models.common import Initializer
+    cfg = scale_down(ARCHS["xlstm-1.3b"], d_model=16, n_heads=2)
+    rng = jax.random.key(seed)
+    p = ssm.mlstm_init(Initializer(rng), cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 12, 16), jnp.float32)
+    y_par, _ = ssm.mlstm_apply(p, x, cfg, chunk=4)
+    state = ssm.mlstm_state_init(cfg, 1)
+    ys = []
+    for t in range(12):
+        y_t, state = ssm.mlstm_decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y_t)
+    y_rec = jnp.concatenate(ys, axis=1)
+    assert np.abs(np.asarray(y_par) - np.asarray(y_rec)).max() < 1e-3
+
+
+@given(
+    k=st.integers(10, 200),
+    n=st.integers(10, 200),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_sign_pack_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    from repro.core.sme import sme_compress
+    w = rng.normal(0, 1, (k, n))
+    smew = sme_compress(w, squeeze=0)
+    assert (np.sign(smew.sign_dense()) == np.where(w < 0, -1, 1)).all()

@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+
+from repro.core import (
+    quantize, dequantize, quant_mse, code_value, bit_planes,
+    overall_bit_sparsity, per_plane_sparsity,
+)
+
+RNG = np.random.default_rng(0)
+W = RNG.normal(0, 0.1, (200, 300))
+
+
+@pytest.mark.parametrize("method", ["sme", "int", "po2", "apt"])
+def test_roundtrip_error_bounded(method):
+    q = quantize(W, method=method, n_bits=8, window=3)
+    err = np.abs(W - dequantize(q))
+    scale = float(np.max(np.abs(W)))
+    bound = {"sme": 2 ** -3, "int": 2 ** -8, "po2": 0.5, "apt": 0.25}[method]
+    assert err.max() <= bound * scale * 1.01
+
+
+def test_sme_window_property():
+    """All '1' bits of every SME codeword lie in a window of size S."""
+    for S in (2, 3, 4):
+        q = quantize(W, method="sme", n_bits=8, window=S)
+        c = q.codes.astype(np.int64)
+        nz = c > 0
+        lead = np.zeros_like(c)
+        lead[nz] = np.floor(np.log2(c[nz])).astype(np.int64)
+        # all set bits >= lead - (S-1)
+        low_mask = (1 << np.maximum(lead - S + 1, 0)) - 1
+        assert (c[nz] & low_mask[nz]).max() == 0
+
+
+def test_sme_monotone_in_S():
+    """Larger window S -> lower quantization error (paper Fig. 9)."""
+    errs = [quant_mse(W, quantize(W, "sme", 8, S)) for S in (1, 2, 3, 4, 8)]
+    assert all(a >= b - 1e-12 for a, b in zip(errs, errs[1:]))
+
+
+def test_sme_sparser_than_int8():
+    q_sme = quantize(W, "sme", 8, 3)
+    q_int = quantize(W, "int", 8)
+    assert overall_bit_sparsity(q_sme) > overall_bit_sparsity(q_int)
+
+
+def test_per_channel_scale():
+    w = W * np.linspace(0.1, 10, W.shape[1])[None, :]
+    q_t = quantize(w, "sme", channel_axis=None)
+    q_c = quantize(w, "sme", channel_axis=1)
+    assert quant_mse(w, q_c) < quant_mse(w, q_t)
+
+
+def test_codes_zero_for_zero_weight():
+    w = np.zeros((4, 4))
+    w[0, 0] = 1.0
+    q = quantize(w, "sme")
+    assert q.codes[1:, :].max() == 0
+
+
+def test_bit_planes_roundtrip():
+    q = quantize(W, "sme")
+    planes = bit_planes(q.codes, 8)
+    rebuilt = np.zeros_like(q.codes, dtype=np.int64)
+    for i in range(8):
+        rebuilt = (rebuilt << 1) | planes[i]
+    assert (rebuilt == q.codes).all()
+
+
+def test_po2_single_bit():
+    q = quantize(W, "po2")
+    c = q.codes.astype(np.int64)
+    assert (np.bitwise_and(c, c - 1)[c > 0] == 0).all()  # power of two
+
+
+def test_code_value_range():
+    q = quantize(W, "sme", 8, 3)
+    v = code_value(q.codes, 8)
+    assert v.min() >= 0 and v.max() < 1.0

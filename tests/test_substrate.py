@@ -1,0 +1,176 @@
+"""Optimizers, data pipeline, checkpointing, fault tolerance, compression."""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import adamw, sgd, lion, cosine_schedule, clip_by_global_norm
+from repro.data import lm_batches, image_task, Prefetcher, shard_batch
+from repro.train import checkpoint as ckpt
+from repro.train.fault import (
+    Heartbeat, StragglerDetector, TransientError, retry_transient,
+    run_resumable,
+)
+from repro.parallel.compress import (
+    quantize_int8, dequantize_int8, compress_tree, decompress_tree,
+    zeros_like_resid,
+)
+
+
+# ------------------------------------------------------------------ optim
+@pytest.mark.parametrize("make", [
+    lambda: adamw(1e-1), lambda: sgd(1e-1), lambda: lion(6e-2)])
+def test_optimizers_minimize_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([1.0])}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for i in range(100):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.int32(i))
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < 0.2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 100.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+# ------------------------------------------------------------------- data
+def test_markov_stream_learnable_structure():
+    it = lm_batches(vocab=64, batch=4, seq=32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+def test_image_task_separable():
+    x, y = image_task(64, size=8)
+    assert x.shape == (64, 8, 8, 3) and y.max() < 10
+
+
+def test_prefetcher_and_shard():
+    it = Prefetcher(lm_batches(vocab=16, batch=8, seq=4), depth=2)
+    b = next(it)
+    s0 = shard_batch(b, 0, 4)
+    s3 = shard_batch(b, 3, 4)
+    assert s0["tokens"].shape == (2, 4)
+    assert (s3["tokens"] == b["tokens"][6:]).all()
+    it.close()
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "n": {"b": jnp.ones(4, jnp.int32)}}
+    ckpt.save(tmp_path, 3, tree)
+    out = ckpt.restore(tmp_path, 3, tree)
+    assert np.allclose(out["a"], tree["a"])
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = {"a": jnp.zeros(10)}
+    ckpt.save(tmp_path, 1, tree)
+    # a stale tmp dir must not break subsequent saves/restores
+    (tmp_path / "step_00000002.tmp").mkdir()
+    ckpt.save(tmp_path, 2, tree)
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_checkpoint_manager_gc_and_async(tmp_path):
+    mgr = ckpt.CheckpointManager(tmp_path, every=1, keep=2, async_save=True)
+    tree = {"a": jnp.zeros(3)}
+    for s in range(5):
+        mgr.maybe_save(s, tree)
+    ckpt.wait_for_async()
+    mgr._gc()
+    steps = sorted(p.name for p in tmp_path.glob("step_????????"))
+    assert len(steps) <= 2
+
+
+def test_checkpoint_elastic_shape_check(tmp_path):
+    tree = {"a": jnp.zeros((4, 4))}
+    ckpt.save(tmp_path, 0, tree)
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, 0, {"a": jnp.zeros((2, 2))})
+
+
+# ------------------------------------------------------------------ fault
+def test_retry_transient_succeeds_after_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientError("boom")
+        return 42
+
+    assert retry_transient(flaky, attempts=4, backoff=0.01) == 42
+
+
+def test_straggler_detector_flags_slow_step():
+    flagged = []
+    det = StragglerDetector(threshold=2.0, warmup=1,
+                            on_straggler=lambda s, dt, e: flagged.append(s))
+    for s, dt in enumerate([1.0, 1.0, 1.0, 5.0, 1.0]):
+        det.observe(s, dt)
+    assert flagged == [3]
+    assert det.ema < 2.0  # outlier not folded into EMA
+
+
+def test_run_resumable_with_injected_failures(tmp_path):
+    hb = Heartbeat(tmp_path / "hb.json")
+    fails = {3: 1}
+
+    def injector(step):
+        if fails.get(step, 0) > 0:
+            fails[step] -= 1
+            raise TransientError("injected")
+
+    log = []
+    state = run_resumable(lambda s, st: log.append(s) or st, state=0,
+                          start_step=0, n_steps=6, heartbeat=hb,
+                          detector=StragglerDetector(),
+                          fail_injector=injector)
+    assert log == list(range(6))
+    assert hb.age() is not None and hb.age() < 10
+
+
+# --------------------------------------------------------------- compress
+def test_int8_quant_error_bound():
+    g = jnp.asarray(np.random.default_rng(0).normal(0, 1, 1000), jnp.float32)
+    q, s = quantize_int8(g)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(g))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the *accumulated* compressed sum tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 1, 256), jnp.float32) * 1e-3
+    params = {"g": g_true}
+    resid = zeros_like_resid(params)
+    acc_comp = np.zeros(256)
+    for _ in range(50):
+        q, resid = compress_tree(params, resid)
+        deq = decompress_tree(q)
+        acc_comp += np.asarray(deq["g"])
+    acc_true = np.asarray(g_true) * 50
+    rel = np.abs(acc_comp - acc_true).max() / (np.abs(acc_true).max() + 1e-12)
+    assert rel < 0.05
