@@ -117,5 +117,55 @@ def bench_dense_vs_sme_xla() -> List[Row]:
     return rows
 
 
+def bench_backend_matrix() -> List[Row]:
+    """All registered execution backends side by side on one weight:
+    offline pack time, per-call exec time, numerics vs the float64 oracle,
+    and the HBM payload each backend moves per weight."""
+    from repro.core import backend as B
+    from repro.core.integrate import pack_sme_param
+    from repro.core.sme import sme_matmul_ref_np
+
+    rows: List[Row] = []
+    rng = np.random.default_rng(3)
+    k = n = 1024
+    w = rng.normal(0, 0.05, (k, n))
+    smew = sme_compress(w, squeeze=1)
+    x = jnp.asarray(rng.normal(0, 1, (16, k)), jnp.float32)
+    y_ref = sme_matmul_ref_np(np.asarray(x), smew)
+    bytes_per_w = {
+        "xla": 9.06 / 8,      # raw codes + sign bitmap travel as-is
+        "v1": smew.storage_bits_per_weight("bytecode") / 8,
+        "v2": 0.75,
+    }
+    for name in B.available_backends():
+        be = B.get_backend(name)
+        t0 = time.perf_counter()
+        param = {key: jnp.asarray(v)
+                 for key, v in pack_sme_param(w, squeeze=1,
+                                              backend=None if not be.OPERANDS
+                                              else name).items()}
+        jax.block_until_ready(list(param.values()))
+        pack_ms = (time.perf_counter() - t0) * 1e3
+        f = jax.jit(lambda a, p, nm=name: B.sme_apply(a, p, nm))
+        y = f(x, param)
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            y = f(x, param)
+        jax.block_until_ready(y)
+        dt_us = (time.perf_counter() - t0) / reps * 1e6
+        rel = float(np.abs(np.asarray(y, np.float64) - y_ref).max()
+                    / np.abs(y_ref).max())
+        rows.append((f"backend/{name}/pack_ms", round(pack_ms, 2),
+                     "offline, includes sme_compress"))
+        rows.append((f"backend/{name}/exec_us", round(dt_us, 1),
+                     f"rel_err={rel:.2e}; interpret-mode walltime off-TPU"))
+        rows.append((f"backend/{name}/bytes_per_weight",
+                     round(bytes_per_w.get(name, float("nan")), 3),
+                     "HBM payload per weight at decode"))
+    return rows
+
+
 ALL = [bench_sme_spmm_numerics, bench_decode_bandwidth_model,
-       bench_dense_vs_sme_xla]
+       bench_dense_vs_sme_xla, bench_backend_matrix]

@@ -17,4 +17,12 @@ from .mapping import (
 from .sparsity import (
     per_plane_sparsity, overall_bit_sparsity, nonempty_row_histogram, weight_sparsity,
 )
-from .sme import SMEWeight, sme_compress, sme_matmul_ref_np
+from .sme import (
+    SMEWeight, sme_compress, sme_matmul_ref_np, csc_tile_order,
+    pack_csc_reference,
+)
+from .backend import (
+    SMEBackend, register_backend, get_backend, available_backends,
+    default_backend, set_default_backend, use_backend, resolve_backend,
+    sme_apply,
+)

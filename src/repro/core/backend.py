@@ -1,0 +1,466 @@
+"""Unified SME execution-backend layer (DESIGN.md §3).
+
+One registry behind which the three execution paths for an SME-compressed
+linear layer live:
+
+  * ``xla`` — dequantize the packed codes to a dense matrix inside the
+    traced program and let XLA fuse the matmul (materializes the weight;
+    correct everywhere, the CPU/dry-run default);
+  * ``v1``  — the ``sme_spmm`` Pallas kernel: uint8 codewords + packed sign
+    bitmap, CSC-of-tiles scalar-prefetch indexing, empty tiles skipped;
+  * ``v2``  — the ``sme_spmm6`` Pallas kernel: minifloat-6 payload
+    (0.75 B/weight), same CSC skipping.
+
+Every backend exposes the same two operations:
+
+  * ``pack_weight(smew)``   — offline: SMEWeight -> kernel-ready operand
+    arrays (numpy).  Run once per weight; the vectorized hot path.
+  * ``matmul2d(x2d, ops)``  — run time: [M, K] @ packed -> [M, N] f32.
+
+Model code never calls a kernel directly: ``sme_apply(x, param)`` resolves
+a backend (explicit name > ``use_backend`` context > ``SME_BACKEND`` env >
+``auto``), finds or builds that backend's operands, and dispatches.
+Operands emitted offline by ``integrate.convert_params_to_sme(backend=...)``
+travel inside the param dict under ``sme_<name>_*`` keys; when absent and
+the arrays are concrete, ``sme_apply`` packs once and memoizes per weight
+(a weakref-validated identity cache), so eager callers also pay packing
+exactly once.  Under tracing with no operands present, kernel backends
+fall back to ``xla`` — packing needs concrete codes.
+
+Static-shape discipline: the Pallas kernels take no value-dependent static
+arguments.  ``n_bits`` (v1) and ``squeezed`` (v2) are folded into the
+output scale as exact power-of-two factors, so the packed meta can stay
+traced 0-d arrays inside jitted programs.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import weakref
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sme import SMEWeight, csc_tile_order
+
+__all__ = [
+    "SMEBackend", "register_backend", "get_backend", "available_backends",
+    "default_backend", "set_default_backend", "use_backend",
+    "resolve_backend", "sme_apply", "smeweight_from_param",
+    "pack_param_operands", "operand_keys", "clear_operand_cache",
+]
+
+_META_DEFAULTS = {"sme_nbits": 8, "sme_squeezed": 1, "sme_window": 3}
+
+
+# --------------------------------------------------------------------- helpers
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _meta_int(param: dict, key: str) -> int:
+    """Concrete meta value from a packed param dict (offline paths only)."""
+    v = param.get(key, _META_DEFAULTS[key])
+    return int(np.asarray(v).reshape(-1)[0])
+
+
+def smeweight_from_param(param: dict, index: Tuple[int, ...] = ()) -> SMEWeight:
+    """Rebuild an :class:`SMEWeight` view of one 2-D slice of a packed param.
+
+    ``index`` selects into the leading stacked dims (e.g. one expert of an
+    [E, D, F] MoE weight).  Arrays must be concrete (offline packing path).
+    """
+    codes = np.asarray(param["sme_codes"])[index]
+    row_exp = np.asarray(param["sme_rowexp"])[index]
+    sign = np.asarray(param["sme_sign"])[index]
+    scale = np.asarray(param["sme_scale"])[index]
+    k = sign.shape[-2]
+    n = scale.shape[-1]
+    return SMEWeight(
+        shape=(k, n),
+        n_bits=_meta_int(param, "sme_nbits"),
+        window=_meta_int(param, "sme_window"),
+        squeezed=_meta_int(param, "sme_squeezed"),
+        tile=(codes.shape[-2], codes.shape[-1]),
+        method="sme",
+        tiled_codes=codes,
+        row_exp=row_exp,
+        sign_packed=sign,
+        scale=scale.astype(np.float64),
+        occupancy=codes.any(axis=(-1, -2)),
+    )
+
+
+def _param_lead(param: dict) -> Tuple[int, ...]:
+    """Leading stacked dims of a packed param (codes base rank is 4)."""
+    return tuple(param["sme_codes"].shape[:-4])
+
+
+def _param_kn(param: dict) -> Tuple[int, int]:
+    return param["sme_sign"].shape[-2], param["sme_scale"].shape[-1]
+
+
+# ------------------------------------------------------------------- registry
+class SMEBackend:
+    """One execution strategy for an SME-packed linear layer."""
+
+    name: str = ""
+    #: operand array names; stored in param dicts as ``sme_<name>_<key>``
+    OPERANDS: Tuple[str, ...] = ()
+
+    # -- offline -----------------------------------------------------------
+    def pack_weight(self, smew: SMEWeight,
+                    pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """SMEWeight -> numpy operand arrays (keys = ``self.OPERANDS``)."""
+        raise NotImplementedError
+
+    # -- run time ----------------------------------------------------------
+    def matmul2d(self, x2d: jax.Array, ops: Dict[str, jax.Array],
+                 param: dict, *, bm: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+        """[M, K] @ packed -> [M, N] float32."""
+        raise NotImplementedError
+
+    # -- plumbing ----------------------------------------------------------
+    def key(self, op: str) -> str:
+        return f"sme_{self.name}_{op}"
+
+    def has_operands(self, param: dict) -> bool:
+        return all(self.key(op) in param for op in self.OPERANDS)
+
+    def operands_from_param(self, param: dict) -> Dict[str, jax.Array]:
+        return {op: param[self.key(op)] for op in self.OPERANDS}
+
+    def supports(self, smew: SMEWeight) -> bool:
+        return True
+
+
+_REGISTRY: Dict[str, SMEBackend] = {}
+
+
+def register_backend(backend_cls):
+    """Class decorator: instantiate and add to the registry."""
+    inst = backend_cls()
+    if not inst.name:
+        raise ValueError(f"{backend_cls.__name__} has no name")
+    _REGISTRY[inst.name] = inst
+    return backend_cls
+
+
+def get_backend(name: str) -> SMEBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown SME backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ------------------------------------------------------- default + resolution
+_backend_stack = [os.environ.get("SME_BACKEND", "auto")]
+
+
+def default_backend() -> str:
+    return _backend_stack[-1]
+
+
+def set_default_backend(name: str) -> None:
+    if name != "auto":
+        get_backend(name)                     # validate eagerly
+    _backend_stack[0] = name
+
+
+@contextlib.contextmanager
+def use_backend(name: Optional[str]):
+    """Scoped default: ``with use_backend("v1"): model.apply(...)``.
+
+    ``None`` is a no-op (keeps the current default) so call sites can
+    thread an optional choice without branching.
+    """
+    if name is None:
+        yield
+        return
+    if name != "auto":
+        get_backend(name)
+    _backend_stack.append(name)
+    try:
+        yield
+    finally:
+        _backend_stack.pop()
+
+
+def _v2_eligible(param: dict) -> bool:
+    meta = [param.get(k, _META_DEFAULTS[k]) for k in
+            ("sme_nbits", "sme_squeezed", "sme_window")]
+    if not all(_is_concrete(m) for m in meta):
+        return False
+    nbits, squeezed, window = (int(np.asarray(m).reshape(-1)[0]) for m in meta)
+    return squeezed >= 1 and window <= 3 and (nbits - squeezed) <= 7
+
+
+def resolve_backend(param: Optional[dict] = None,
+                    name: Optional[str] = None) -> SMEBackend:
+    """Pick the backend for one call: explicit name > context default > auto.
+
+    ``auto`` prefers operands already packed into the param (v2 over v1),
+    then the Pallas kernels on TPU (v2 when the format is minifloat-6
+    eligible), and the XLA dequant path everywhere else.
+    """
+    name = name or default_backend()
+    if name != "auto":
+        return get_backend(name)
+    if param is not None:
+        for cand in ("v2", "v1"):
+            if cand in _REGISTRY and _REGISTRY[cand].has_operands(param):
+                return _REGISTRY[cand]
+    if jax.default_backend() == "tpu":
+        if param is None or _v2_eligible(param):
+            return _REGISTRY["v2"]
+        return _REGISTRY["v1"]
+    return _REGISTRY["xla"]
+
+
+# ----------------------------------------------------------- packing + cache
+def pack_param_operands(param: dict, backend: SMEBackend) -> Dict[str, jax.Array]:
+    """Backend operands for a packed param (handles stacked lead dims).
+
+    Stacked weights share one list length L (max over slices) so the
+    operand arrays stack rectangularly.
+    """
+    lead = _param_lead(param)
+    if not lead:
+        ops = backend.pack_weight(smeweight_from_param(param))
+        return {k: jnp.asarray(v) for k, v in ops.items()}
+    idxs = list(np.ndindex(*lead))
+    smews = [smeweight_from_param(param, i) for i in idxs]
+    pad_to = max(max(int(s.occupancy.sum(axis=0).max()), 1) for s in smews)
+    per = [backend.pack_weight(s, pad_to=pad_to) for s in smews]
+    return {
+        k: jnp.asarray(
+            np.stack([p[k] for p in per]).reshape(lead + per[0][k].shape))
+        for k in per[0]
+    }
+
+
+def operand_keys(backend_name: str) -> Tuple[str, ...]:
+    be = get_backend(backend_name)
+    return tuple(be.key(op) for op in be.OPERANDS)
+
+
+# weight identity -> packed operands; validated by weakref so a recycled
+# id() can never alias a dead weight, and evicted by the weakref callback
+# when the weight dies so operand arrays don't outlive their weight
+_OPERAND_CACHE: Dict[Tuple[str, int], Tuple[object, Dict[str, jax.Array]]] = {}
+
+
+def clear_operand_cache() -> None:
+    _OPERAND_CACHE.clear()
+
+
+def _cached_operands(param: dict, backend: SMEBackend) -> Dict[str, jax.Array]:
+    anchor = param["sme_codes"]
+    key = (backend.name, id(anchor))
+    hit = _OPERAND_CACHE.get(key)
+    if hit is not None and hit[0]() is anchor:
+        return hit[1]
+    ops = pack_param_operands(param, backend)
+    try:
+        ref = weakref.ref(anchor, lambda _, k=key: _OPERAND_CACHE.pop(k, None))
+    except TypeError:
+        return ops            # non-weakrefable leaf: don't risk pinning it
+    _OPERAND_CACHE[key] = (ref, ops)
+    return ops
+
+
+# ------------------------------------------------------------------ backends
+@register_backend
+class XLABackend(SMEBackend):
+    """Dequant-materialize: codes -> dense bf16/f32 in-graph, XLA matmul."""
+
+    name = "xla"
+    OPERANDS = ()
+
+    def pack_weight(self, smew, pad_to=None):
+        return {}                 # the raw packed param IS the operand set
+    # no matmul2d: sme_apply short-circuits operand-free backends through
+    # sme_dequant_jnp directly (handles stacked lead dims in one matmul)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bm", "interpret"))
+def _v1_call(x2d, codes, sign, rowscale, rowid, nnz, scale, qscale,
+             *, n, bm, interpret):
+    from repro.kernels.sme_spmm.sme_spmm import sme_spmm
+    m, k = x2d.shape
+    _, _, bk, _ = codes.shape
+    nr = -(-k // bk)
+    mp = -(-m // bm) * bm
+    xp = jnp.zeros((mp, nr * bk), x2d.dtype).at[:m, :k].set(x2d)
+    # n_bits folded into qscale (= 2^-n_bits, exact), so the kernel needs
+    # no value-dependent static argument and meta can stay traced
+    y = sme_spmm(xp, codes, sign, rowscale, rowid, nnz,
+                 n_bits=0, bm=bm, out_dtype=jnp.float32, interpret=interpret)
+    return y[:m, :n] * scale * qscale
+
+
+@register_backend
+class SpmmV1Backend(SMEBackend):
+    """``sme_spmm`` kernel: uint8 codewords + sign bitmap, CSC tile skip."""
+
+    name = "v1"
+    OPERANDS = ("codes", "sign", "rowscale", "rowid", "nnz")
+
+    def pack_weight(self, smew, pad_to=None):
+        return smew.pack_csc(pad_to=pad_to)
+
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+        if interpret is None:
+            interpret = _default_interpret()
+        n = _param_kn(param)[1]
+        scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
+        nbits = jnp.asarray(param.get("sme_nbits", 8), jnp.float32)
+        return _v1_call(x2d, ops["codes"], ops["sign"], ops["rowscale"],
+                        ops["rowid"], ops["nnz"], scale, jnp.exp2(-nbits),
+                        n=n, bm=bm, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bn", "bm", "interpret"))
+def _v2_call(x2d, packed, rowscale, rowid, nnz, scale, qscale,
+             *, n, bn, bm, interpret):
+    from repro.kernels.sme_spmm.sme_spmm6 import sme_spmm6
+    m, k = x2d.shape
+    bk = packed.shape[-2]
+    nr = -(-k // bk)
+    mp = -(-m // bm) * bm
+    xp = jnp.zeros((mp, nr * bk), x2d.dtype).at[:m, :k].set(x2d)
+    # squeezed folded into qscale (= 2^-squeezed, exact): see _v1_call
+    y = sme_spmm6(xp, packed, rowscale, rowid, nnz,
+                  squeezed=0, bn=bn, bm=bm, out_dtype=jnp.float32,
+                  interpret=interpret)
+    return y[:m, :n] * scale * qscale
+
+
+@register_backend
+class SpmmV2Backend(SMEBackend):
+    """``sme_spmm6`` kernel: minifloat-6 payload (0.75 B/weight), CSC skip."""
+
+    name = "v2"
+    OPERANDS = ("packed", "rowscale", "rowid", "nnz")
+
+    def supports(self, smew):
+        return (smew.squeezed >= 1 and smew.window <= 3
+                and smew.live_bits <= 7)
+
+    def pack_weight(self, smew, pad_to=None):
+        from .minifloat import encode6, pack6
+        if not self.supports(smew):
+            raise ValueError(
+                "backend v2 (minifloat-6) needs squeeze >= 1, window <= 3 "
+                f"and live_bits <= 7; got squeeze={smew.squeezed}, "
+                f"window={smew.window}, live_bits={smew.live_bits}")
+        # one CSC gather pass; does NOT go through pack_csc, whose
+        # codes/sign payloads v2 would immediately discard
+        occ = smew.occupancy
+        nc = smew.grid[1]
+        tr, tc = smew.tile
+        nnz = occ.sum(axis=0).astype(np.int32)
+        L = int(pad_to if pad_to is not None else max(int(nnz.max()), 1))
+        if int(nnz.max()) > L:
+            raise ValueError(
+                f"pad_to={L} < max nnz per column {int(nnz.max())}")
+        packed = np.zeros((nc, L, tr, 3 * tc // 4), np.uint8)
+        rowscale = np.ones((nc, L, tr), dtype=np.float32)
+        rowid = np.zeros((nc, L), dtype=np.int32)
+        col, row, slot = csc_tile_order(occ)
+        if col.size:
+            c6 = encode6(smew.tiled_codes[row, col],
+                         smew.sign_tiled()[row, col],
+                         smew.n_bits, smew.squeezed)
+            packed[col, slot] = pack6(c6)
+            rowscale[col, slot] = (2.0 ** smew.row_exp[row, col]
+                                   ).astype(np.float32)
+            rowid[col, slot] = row
+        return {"packed": packed, "rowscale": rowscale,
+                "rowid": rowid, "nnz": nnz}
+
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+        if interpret is None:
+            interpret = _default_interpret()
+        n = _param_kn(param)[1]
+        bn = ops["packed"].shape[-1] * 4 // 3
+        scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
+        sq = jnp.asarray(param.get("sme_squeezed", 1), jnp.float32)
+        return _v2_call(x2d, ops["packed"], ops["rowscale"], ops["rowid"],
+                        ops["nnz"], scale, jnp.exp2(-sq),
+                        n=n, bn=bn, bm=bm, interpret=bool(interpret))
+
+
+# ------------------------------------------------------------------ dispatch
+def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
+              *, out_dtype=None, bm: int = 128,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """y = x @ W_eff for an SME-packed param dict; x: [..., K] -> [..., N].
+
+    The single entry point every model layer dispatches through.  Handles
+    leading stacked weight dims (MoE experts): when the param has lead dims
+    ``E``, ``x`` must be [*E, ..., K] and each slice runs its own kernel
+    call (the grids differ only in the nnz prefetch values, so they share
+    one compiled program).
+    """
+    be = resolve_backend(param, backend)
+    if out_dtype is None:
+        out_dtype = x.dtype
+    lead = _param_lead(param)
+    k, n = _param_kn(param)
+
+    ops: Optional[Dict[str, jax.Array]] = None
+    if be.OPERANDS:
+        if be.has_operands(param):
+            ops = be.operands_from_param(param)
+        elif _is_concrete(param["sme_codes"]):
+            ops = _cached_operands(param, be)
+        else:
+            be = get_backend("xla")   # traced raw codes: cannot pack here
+
+    if not be.OPERANDS:               # xla: dequant handles lead dims itself
+        from .integrate import sme_dequant_jnp
+        w = sme_dequant_jnp(param, dtype=x.dtype)
+        return jnp.matmul(x, w).astype(out_dtype)
+
+    if not lead:
+        x2d = x.reshape(-1, x.shape[-1])
+        y = be.matmul2d(x2d, ops, param, bm=bm, interpret=interpret)
+        return y.reshape(*x.shape[:-1], n).astype(out_dtype)
+
+    nl = len(lead)
+    if tuple(x.shape[:nl]) != lead:
+        raise ValueError(
+            f"stacked SME param lead dims {lead} do not match x "
+            f"leading shape {x.shape[:nl]}")
+    inner = x.shape[nl:-1]
+    ys = []
+    for idx in np.ndindex(*lead):
+        ops_i = {key: v[idx] for key, v in ops.items()}
+        # meta arrays stack with shape == lead (scan-compatibility); slice
+        # them down to scalars alongside the payload
+        meta_i = {mk: (param[mk][idx]
+                       if getattr(param[mk], "ndim", 0) == len(lead)
+                       else param[mk])
+                  for mk in _META_DEFAULTS if mk in param}
+        param_i = {"sme_scale": param["sme_scale"][idx],
+                   "sme_sign": param["sme_sign"][idx], **meta_i}
+        x2d = x[idx].reshape(-1, k)
+        ys.append(be.matmul2d(x2d, ops_i, param_i, bm=bm,
+                              interpret=interpret))
+    y = jnp.stack(ys).reshape(lead + inner + (n,))
+    return y.astype(out_dtype)

@@ -6,11 +6,14 @@ packed SME format and serve them through the same model code.
 
     {"sme_codes": u8 [..., nr, nc, tr, tc], "sme_rowexp": u8 [..., nr, nc, tr],
      "sme_sign": u8 [..., K, ceil(N/8)], "sme_scale": f32 [..., 1, N],
-     "sme_nbits": (), "b": <bias passthrough>}
+     "sme_nbits"/"sme_squeezed"/"sme_window": () i32,
+     optionally "sme_v1_*"/"sme_v2_*" kernel operands,
+     "b": <bias passthrough>}
 
 ``models.common.linear`` (and ``moe_apply``) detect the packed form and
-dequantize on the fly — in XLA this materializes the bf16 weight per use
-(the Pallas ``sme_spmm`` kernel is the no-materialize path on TPU); the
+dispatch through ``core.backend.sme_apply`` — the XLA backend materializes
+the bf16 weight per use, the Pallas ``sme_spmm``/``sme_spmm6`` backends
+run the no-materialize block-sparse kernels (DESIGN.md §3); the
 HBM-resident format is uint8 codes + 1-bit signs, which is what the
 serve-time roofline memory term sees.
 """
@@ -29,17 +32,40 @@ __all__ = ["pack_sme_param", "convert_params_to_sme", "sme_dequant_jnp",
 
 
 def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
-                   tile=(128, 128)) -> dict:
+                   tile=(128, 128), backend=None) -> dict:
+    """Compress one 2-D weight to the raw packed-dict format.
+
+    ``backend`` ("v1" | "v2" | "all" | None) additionally emits that
+    execution backend's kernel-ready CSC operands under ``sme_<name>_*``
+    keys, so serving never packs at call time (DESIGN.md §3).
+    """
     smew = sme_compress(np.asarray(w2d, np.float64), n_bits=n_bits,
                         window=window, squeeze=squeeze, tile=tile)
     k, n = smew.shape
-    return {
+    out = {
         "sme_codes": smew.tiled_codes,                       # [nr,nc,tr,tc] u8
         "sme_rowexp": smew.row_exp,                          # [nr,nc,tr] u8
         "sme_sign": smew.sign_packed,                        # [K, ceil(N/8)] u8
         "sme_scale": np.broadcast_to(
             smew.scale, (1, n)).astype(np.float32).copy(),   # [1, N]
+        "sme_nbits": np.asarray(n_bits, np.int32),           # ()
+        "sme_squeezed": np.asarray(squeeze, np.int32),       # ()
+        "sme_window": np.asarray(window, np.int32),          # ()
     }
+    for name in _backend_names(backend):
+        from .backend import get_backend
+        be = get_backend(name)
+        for op, arr in be.pack_weight(smew).items():
+            out[be.key(op)] = arr
+    return out
+
+
+def _backend_names(backend) -> tuple:
+    if backend in (None, "xla", "auto"):
+        return ()
+    if backend == "all":
+        return ("v1", "v2")
+    return (backend,)
 
 
 def _eligible(path_names, leaf) -> bool:
@@ -57,8 +83,14 @@ def _eligible(path_names, leaf) -> bool:
 
 
 def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
-                          tile=(128, 128), predicate=None):
-    """Returns a new param tree with eligible weights SME-packed."""
+                          tile=(128, 128), predicate=None, backend=None):
+    """Returns a new param tree with eligible weights SME-packed.
+
+    ``backend`` ("v1" | "v2" | "all" | None) also emits kernel-ready CSC
+    operands per weight (stacked expert dims share one padded list length
+    so the operand arrays stay rectangular); ``core.backend.sme_apply``
+    then dispatches with zero call-time packing.
+    """
     predicate = predicate or _eligible
 
     def walk(tree, path):
@@ -78,21 +110,38 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
         flat = leaf.reshape((-1, k, n))
         packed = [pack_sme_param(flat[i], n_bits, window, squeeze, tile)
                   for i in range(flat.shape[0])]
+        # meta keys stack too (shape == lead): model code may lax.scan over
+        # stacked layers, which slices every leaf along the leading axis
         stacked = {key: np.stack([p[key] for p in packed]).reshape(
             lead + packed[0][key].shape) for key in packed[0]}
+        for name in _backend_names(backend):
+            from .backend import get_backend, pack_param_operands
+            be = get_backend(name)
+            for op, arr in pack_param_operands(stacked, be).items():
+                stacked[be.key(op)] = arr
         return {key: jnp.asarray(v) for key, v in stacked.items()}
 
     return walk(params, [])
 
 
-def sme_dequant_jnp(p: dict, n_bits: int = 8, dtype=jnp.bfloat16):
-    """Packed dict -> dense [..., K, N] weight (traced, fused by XLA)."""
+def sme_dequant_jnp(p: dict, n_bits=None, dtype=jnp.bfloat16):
+    """Packed dict -> dense [..., K, N] weight (traced, fused by XLA).
+
+    ``n_bits`` defaults to the param's own ``sme_nbits`` entry (falling
+    back to 8 for legacy dicts), so non-8-bit conversions dequantize
+    correctly.  It may be a Python int or a traced 0-d array — the
+    2^-n_bits step scale is applied via ``exp2`` (exact either way).
+    """
     codes = p["sme_codes"]
     lead = codes.shape[:-4]
     nr, nc, tr, tc = codes.shape[-4:]
     k = p["sme_sign"].shape[-2]
     n = p["sme_scale"].shape[-1]
-    val = codes.astype(jnp.float32) * (2.0 ** -n_bits)
+    if n_bits is None:
+        n_bits = p.get("sme_nbits", 8)
+    nb = jnp.asarray(n_bits, jnp.float32)
+    nb = nb.reshape(nb.shape + (1,) * (codes.ndim - nb.ndim))
+    val = codes.astype(jnp.float32) * jnp.exp2(-nb)
     val = val * jnp.exp2(p["sme_rowexp"].astype(jnp.float32))[..., None]
     # untile [..., nr, nc, tr, tc] -> [..., nr*tr, nc*tc]
     perm = tuple(range(len(lead))) + tuple(
@@ -151,6 +200,9 @@ def abstract_sme_params(aparams, tile=(128, 128), predicate=None):
             "sme_rowexp": jax.ShapeDtypeStruct(lead + (nr, nc, tr), jnp.uint8),
             "sme_sign": jax.ShapeDtypeStruct(lead + (k, -(-n // 8)), jnp.uint8),
             "sme_scale": jax.ShapeDtypeStruct(lead + (1, n), jnp.float32),
+            "sme_nbits": jax.ShapeDtypeStruct(lead, jnp.int32),
+            "sme_squeezed": jax.ShapeDtypeStruct(lead, jnp.int32),
+            "sme_window": jax.ShapeDtypeStruct(lead, jnp.int32),
         }
 
     return walk(aparams, [])
@@ -160,6 +212,8 @@ def cast_params(aparams, dtype=jnp.bfloat16):
     """Abstract dtype swap for float leaves (bf16 serve baseline)."""
     def one(leaf):
         if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
-            return jax.ShapeDtypeStruct(leaf.shape, dtype)                 if isinstance(leaf, jax.ShapeDtypeStruct) else leaf.astype(dtype)
+            if isinstance(leaf, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(leaf.shape, dtype)
+            return leaf.astype(dtype)
         return leaf
     return jax.tree.map(one, aparams)

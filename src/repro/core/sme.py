@@ -27,7 +27,8 @@ from .bitslice import tile_codes, untile_codes
 from .quant import QuantizedTensor, quantize
 from .squeeze import SqueezeResult, squeeze_out
 
-__all__ = ["SMEWeight", "sme_compress", "sme_matmul_ref_np"]
+__all__ = ["SMEWeight", "sme_compress", "sme_matmul_ref_np",
+           "csc_tile_order", "pack_csc_reference"]
 
 
 @dataclasses.dataclass
@@ -164,6 +165,10 @@ class SMEWeight:
         codes and point at row tile 0 (a no-op accumulation guarded by
         ``nnz`` in the kernel).
 
+        Fully vectorized (one numpy gather over all occupied tiles); see
+        :func:`pack_csc_reference` for the loop oracle it is regression-
+        tested against (DESIGN.md §3).
+
         Returns dict with:
           codes    u8  [Nt, L, tr, tc]    shifted codewords
           sign     u8  [Nt, L, tr//8, tc] sign bits packed along rows (1 = neg)
@@ -182,23 +187,70 @@ class SMEWeight:
         sign = np.zeros((nc, L, tr // 8, tc), dtype=np.uint8)
         rowscale = np.ones((nc, L, tr), dtype=np.float32)
         rowid = np.zeros((nc, L), dtype=np.int32)
-        # dense padded sign bits in the tiled view
-        k, n = self.shape
-        bits = np.unpackbits(self.sign_packed, axis=1)[:, :n]     # [K, N] 1=neg
-        from .bitslice import tile_codes as _tile
-        sign_tiled = _tile(bits, self.tile)                       # [nr, nc, tr, tc]
-        for j in range(nc):
-            rows = np.nonzero(occ[:, j])[0]
-            for l, i in enumerate(rows):
-                codes[j, l] = self.tiled_codes[i, j]
-                sign[j, l] = np.packbits(
-                    sign_tiled[i, j].astype(np.uint8), axis=0)
-                rowscale[j, l] = (2.0 ** self.row_exp[i, j]).astype(np.float32)
-                rowid[j, l] = i
+        col, row, slot = csc_tile_order(occ)
+        if col.size:
+            codes[col, slot] = self.tiled_codes[row, col]
+            sign[col, slot] = np.packbits(
+                self.sign_tiled()[row, col].astype(np.uint8), axis=1)
+            rowscale[col, slot] = (2.0 ** self.row_exp[row, col]
+                                   ).astype(np.float32)
+            rowid[col, slot] = row
         return {
             "codes": codes, "sign": sign, "rowscale": rowscale,
             "rowid": rowid, "nnz": nnz,
         }
+
+    def sign_tiled(self) -> np.ndarray:
+        """Dense 0/1 sign bits in the tiled view: uint8 [nr, nc, tr, tc]."""
+        k, n = self.shape
+        bits = np.unpackbits(self.sign_packed, axis=1)[:, :n]     # [K, N] 1=neg
+        return tile_codes(bits, self.tile)
+
+
+def csc_tile_order(occ: np.ndarray):
+    """Occupied tiles of a [nr, nc] occupancy map in CSC order.
+
+    Returns (col, row, slot) index vectors: entry ``t`` says occupied tile
+    ``(row[t], col[t])`` lands in list slot ``slot[t]`` of its column —
+    i.e. ``packed[col, slot] = tiled[row, col]`` is the whole CSC gather.
+    """
+    col, row = np.nonzero(occ.T)        # sorted by (col_tile, row_tile)
+    nnz = occ.sum(axis=0).astype(np.int64)
+    offsets = np.cumsum(nnz) - nnz      # first flat slot of each column
+    slot = np.arange(col.size) - np.repeat(offsets, nnz)
+    return col, row, slot
+
+
+def pack_csc_reference(smew: "SMEWeight",
+                       pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Seed (loop) implementation of :meth:`SMEWeight.pack_csc`.
+
+    Kept as the bit-exactness oracle for the vectorized gather; O(nc * L)
+    Python loops, do not use on real layer sizes.
+    """
+    nr, nc = smew.grid
+    tr, tc = smew.tile
+    occ = smew.occupancy
+    nnz = occ.sum(axis=0).astype(np.int32)
+    L = int(pad_to if pad_to is not None else max(int(nnz.max()), 1))
+    if int(nnz.max()) > L:
+        raise ValueError(f"pad_to={L} < max nnz per column {int(nnz.max())}")
+    codes = np.zeros((nc, L, tr, tc), dtype=smew.tiled_codes.dtype)
+    sign = np.zeros((nc, L, tr // 8, tc), dtype=np.uint8)
+    rowscale = np.ones((nc, L, tr), dtype=np.float32)
+    rowid = np.zeros((nc, L), dtype=np.int32)
+    sign_tiled = smew.sign_tiled()
+    for j in range(nc):
+        rows = np.nonzero(occ[:, j])[0]
+        for l, i in enumerate(rows):
+            codes[j, l] = smew.tiled_codes[i, j]
+            sign[j, l] = np.packbits(sign_tiled[i, j].astype(np.uint8), axis=0)
+            rowscale[j, l] = (2.0 ** smew.row_exp[i, j]).astype(np.float32)
+            rowid[j, l] = i
+    return {
+        "codes": codes, "sign": sign, "rowscale": rowscale,
+        "rowid": rowid, "nnz": nnz,
+    }
 
 
 def sme_compress(

@@ -1,7 +1,12 @@
-"""Jit'd public wrapper around the ``sme_spmm`` Pallas kernel."""
+"""Compat wrappers around the unified SME execution-backend layer.
+
+Packing and dispatch now live in :mod:`repro.core.backend` (DESIGN.md §3);
+these functions keep the original kernel-level API used by tests, examples
+and benchmarks.  New code should call ``core.backend.sme_apply`` on a
+packed param dict instead.
+"""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -9,49 +14,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sme import SMEWeight
-from .sme_spmm import sme_spmm
-from .sme_spmm6 import sme_spmm6
 
 __all__ = ["pack_operands", "sme_linear", "sme_linear_from_weight",
            "pack_operands6", "sme_linear6_from_weight"]
 
 
+def _scale_row(smew: SMEWeight) -> jnp.ndarray:
+    return jnp.asarray(np.broadcast_to(smew.scale, (1, smew.shape[1])),
+                       dtype=jnp.float32)
+
+
 def pack_operands(smew: SMEWeight, pad_to: Optional[int] = None) -> dict:
     """SMEWeight -> device arrays for :func:`sme_linear` (run once, offline)."""
-    csc = smew.pack_csc(pad_to=pad_to)
-    return {
-        "codes": jnp.asarray(csc["codes"]),
-        "sign": jnp.asarray(csc["sign"]),
-        "rowscale": jnp.asarray(csc["rowscale"]),
-        "rowid": jnp.asarray(csc["rowid"]),
-        "nnz": jnp.asarray(csc["nnz"]),
-        "scale": jnp.asarray(np.broadcast_to(smew.scale, (1, smew.shape[1])),
-                             dtype=jnp.float32),
-    }
+    from repro.core.backend import get_backend
+    ops = get_backend("v1").pack_weight(smew, pad_to=pad_to)
+    return {**{k: jnp.asarray(v) for k, v in ops.items()},
+            "scale": _scale_row(smew)}
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_bits", "k", "n", "bm", "out_dtype", "interpret"),
-)
-def _sme_linear_impl(x2d, ops, *, n_bits, k, n, bm, out_dtype, interpret):
-    m = x2d.shape[0]
-    nt, L, bk, bn = ops["codes"].shape
-    k_pad = ops["rowid"].max() if False else None  # static below
-    nr = -(-k // bk)
-    mp = -(-m // bm) * bm
-    xp = jnp.zeros((mp, nr * bk), x2d.dtype).at[:m, :k].set(x2d)
-    y = sme_spmm(
-        xp, ops["codes"], ops["sign"], ops["rowscale"], ops["rowid"],
-        ops["nnz"], n_bits=n_bits, bm=bm, out_dtype=jnp.float32,
-        interpret=interpret,
-    )
-    y = y[:m, :n] * ops["scale"]
-    return y.astype(out_dtype)
+def pack_operands6(smew: SMEWeight, pad_to: Optional[int] = None) -> dict:
+    """CSC gather of minifloat-6 tiles (kernel v2: 0.75 B/weight payload)."""
+    from repro.core.backend import get_backend
+    ops = get_backend("v2").pack_weight(smew, pad_to=pad_to)
+    return {**{k: jnp.asarray(v) for k, v in ops.items()},
+            "scale": _scale_row(smew)}
 
 
 def sme_linear(
@@ -65,16 +51,16 @@ def sme_linear(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """y = x @ W_eff for an SME-packed weight; x: [..., K] -> [..., N]."""
-    if interpret is None:
-        interpret = _default_interpret()
+    from repro.core import backend as B
+    be = B.get_backend("v1")
     k, n = shape
+    param = {"sme_scale": ops["scale"],
+             "sme_sign": jax.ShapeDtypeStruct((k, -(-n // 8)), jnp.uint8),
+             "sme_nbits": n_bits}
     lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
-    y = _sme_linear_impl(
-        x2d, ops, n_bits=n_bits, k=k, n=n, bm=bm,
-        out_dtype=out_dtype, interpret=bool(interpret),
-    )
-    return y.reshape(*lead, n)
+    y = be.matmul2d(x.reshape(-1, x.shape[-1]), ops, param,
+                    bm=bm, interpret=interpret)
+    return y.reshape(*lead, n).astype(out_dtype)
 
 
 def sme_linear_from_weight(x, smew: SMEWeight, **kw):
@@ -83,50 +69,18 @@ def sme_linear_from_weight(x, smew: SMEWeight, **kw):
                       shape=smew.shape, **kw)
 
 
-def pack_operands6(smew: SMEWeight, pad_to: Optional[int] = None) -> dict:
-    """CSC gather of minifloat-6 tiles (kernel v2: 0.75 B/weight payload)."""
-    from repro.core.minifloat import encode6, pack6
-    from repro.core.bitslice import tile_codes as _tile
-    csc = smew.pack_csc(pad_to=pad_to)
-    k, n = smew.shape
-    signs = np.unpackbits(smew.sign_packed, axis=1)[:, :n].astype(np.uint8)
-    signs_t = _tile(signs, smew.tile)                 # [nr, nc, tr, tc]
-    nt, L = csc["rowid"].shape
-    tr, tc = smew.tile
-    packed = np.zeros((nt, L, tr, 3 * tc // 4), np.uint8)
-    occ = smew.occupancy
-    for j in range(nt):
-        rows = np.nonzero(occ[:, j])[0]
-        for l, i in enumerate(rows):
-            c6 = encode6(smew.tiled_codes[i, j], signs_t[i, j],
-                         smew.n_bits, smew.squeezed)
-            packed[j, l] = pack6(c6)
-    return {
-        "packed": jnp.asarray(packed),
-        "rowscale": jnp.asarray(csc["rowscale"]),
-        "rowid": jnp.asarray(csc["rowid"]),
-        "nnz": jnp.asarray(csc["nnz"]),
-        "scale": jnp.asarray(np.broadcast_to(smew.scale, (1, n)),
-                             dtype=jnp.float32),
-    }
-
-
 def sme_linear6_from_weight(x, smew: SMEWeight, bm: int = 128,
                             out_dtype=jnp.float32,
                             interpret: Optional[bool] = None):
     """v2 convenience wrapper: minifloat-6 kernel end to end."""
-    if interpret is None:
-        interpret = _default_interpret()
+    from repro.core import backend as B
+    be = B.get_backend("v2")
     ops = pack_operands6(smew)
     k, n = smew.shape
+    param = {"sme_scale": ops["scale"],
+             "sme_sign": jax.ShapeDtypeStruct((k, -(-n // 8)), jnp.uint8),
+             "sme_squeezed": smew.squeezed}
     lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
-    m = x2d.shape[0]
-    nr = -(-k // smew.tile[0])
-    mp = -(-m // bm) * bm
-    xp = jnp.zeros((mp, nr * smew.tile[0]), x2d.dtype).at[:m, :k].set(x2d)
-    y = sme_spmm6(xp, ops["packed"], ops["rowscale"], ops["rowid"],
-                  ops["nnz"], squeezed=smew.squeezed, bn=smew.tile[1],
-                  bm=bm, interpret=bool(interpret))
-    y = (y[:m, :n] * ops["scale"]).astype(out_dtype)
-    return y.reshape(*lead, n)
+    y = be.matmul2d(x.reshape(-1, x.shape[-1]), ops, param,
+                    bm=bm, interpret=interpret)
+    return y.reshape(*lead, n).astype(out_dtype)

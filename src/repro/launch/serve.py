@@ -7,6 +7,7 @@ SME-compressed weights.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -27,6 +28,12 @@ def main():
     ap.add_argument("--sme", action="store_true",
                     help="serve SME-compressed weights")
     ap.add_argument("--squeeze", type=int, default=1)
+    ap.add_argument("--backend",
+                    default=os.environ.get("SME_BACKEND", "auto"),
+                    choices=["auto", "xla", "v1", "v2"],
+                    help="SME execution backend; v1/v2 pre-pack kernel "
+                         "operands offline and serve through the Pallas "
+                         "block-sparse kernels (interpret mode off-TPU)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -35,10 +42,19 @@ def main():
     if args.sme:
         from repro.core.integrate import convert_params_to_sme, sme_storage_summary
         params_np = jax.tree.map(np.asarray, params)
-        params = convert_params_to_sme(params_np, squeeze=args.squeeze)
+        emit = args.backend if args.backend in ("v1", "v2") else None
+        if emit is None and args.backend == "auto" \
+                and jax.default_backend() == "tpu":
+            # auto on TPU serves through the Pallas kernels, which need
+            # operands emitted offline (jitted programs cannot pack)
+            emit = "v2" if args.squeeze >= 1 else "v1"
+        params = convert_params_to_sme(params_np, squeeze=args.squeeze,
+                                       backend=emit)
         print("SME storage:", sme_storage_summary(params))
+        print(f"SME backend: {args.backend}")
 
-    eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max)
+    eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
+                      backend=args.backend if args.sme else None)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, size=5 + i % 4,

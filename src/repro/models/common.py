@@ -66,14 +66,16 @@ def apply_norm(x, p, kind):
     return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
 
 
-def linear(x, p):
+def linear(x, p, backend=None):
+    """x @ w (+ b).  SME-packed weights dispatch through the execution
+    backend registry (``core.backend``): XLA dequant, or the Pallas
+    block-sparse kernels when selected/packed (DESIGN.md §3)."""
     we = p["w"]
     if isinstance(we, dict) and "sme_codes" in we:
-        from repro.core.integrate import sme_dequant_jnp
-        w = sme_dequant_jnp(we, dtype=x.dtype)
+        from repro.core.backend import sme_apply
+        y = sme_apply(x, we, backend, out_dtype=x.dtype)
     else:
-        w = we.astype(x.dtype)
-    y = x @ w
+        y = x @ we.astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y

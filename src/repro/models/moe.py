@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import Initializer, linear_init
+from .common import Initializer, linear, linear_init
 
 __all__ = ["moe_init", "moe_apply", "moe_capacity"]
 
@@ -82,19 +82,20 @@ def moe_apply(p, x, cfg, group_size: int = 2048):
     wgt, idx = jax.lax.top_k(probs, k)               # [B,S,k]
     wgt = wgt / jnp.maximum(wgt.sum(-1, keepdims=True), 1e-9)
 
-    def expert_w(name):
+    def expert_mm(name, h):
+        """h [E, C, D] @ p[name] [E, D, F] -> [E, C, F], through the SME
+        execution-backend registry for packed weights (stacked dispatch)."""
         q = p[name]
         if isinstance(q, dict) and "sme_codes" in q:
-            from repro.core.integrate import sme_dequant_jnp
-            return sme_dequant_jnp(q, dtype=x.dtype)
-        return q.astype(x.dtype)
+            from repro.core.backend import sme_apply
+            return sme_apply(h, q, out_dtype=x.dtype)
+        return jnp.matmul(h, q.astype(x.dtype))
 
     def per_group(xg, idxg, wg_):
         buf, flat_e, slot, keep = _group_dispatch(xg, idxg, wg_, e, cap)
         # expert SwiGLU, batched over E
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, expert_w("wg")))
-        h = h * jnp.einsum("ecd,edf->ecf", buf, expert_w("wi"))
-        out = jnp.einsum("ecf,efd->ecd", h, expert_w("wo"))
+        h = jax.nn.silu(expert_mm("wg", buf)) * expert_mm("wi", buf)
+        out = expert_mm("wo", h)
         out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))  # scratch slot reads 0
         y_tok = out[flat_e, slot]                     # [S*k, D]
         y_tok = y_tok * (keep * wg_.reshape(-1))[:, None].astype(x.dtype)
@@ -111,8 +112,7 @@ def moe_apply(p, x, cfg, group_size: int = 2048):
     x = x.reshape(b0, -1, d)[:, :s0]
     if "shared" in p:
         sh = p["shared"]
-        hs = jax.nn.silu(x @ sh["wg"]["w"].astype(x.dtype))
-        hs = hs * (x @ sh["wi"]["w"].astype(x.dtype))
-        y = y + hs @ sh["wo"]["w"].astype(x.dtype)
+        hs = jax.nn.silu(linear(x, sh["wg"])) * linear(x, sh["wi"])
+        y = y + linear(hs, sh["wo"])
     # aux load-balancing loss (GShard): returned via aux dict by caller if needed
     return y

@@ -73,6 +73,22 @@ def _lm_head(params, cfg):
     return we
 
 
+def _head_logits(params, cfg, xl):
+    """Final projection xl[B, D] -> logits[B, V] (f32).
+
+    Packed untied heads dispatch through the SME execution-backend
+    registry (the decode hot path's largest matmul); tied/dense heads
+    keep the materialized matrix.  Training keeps ``_lm_head`` — its
+    chunked CE loss needs the dense matrix."""
+    if not cfg.tie_embeddings:
+        we = params["lm_head"]["w"]
+        if isinstance(we, dict) and "sme_codes" in we:
+            from repro.core.backend import sme_apply
+            return sme_apply(xl, we, out_dtype=jnp.float32)
+    head = _lm_head(params, cfg)
+    return (xl @ head.astype(xl.dtype)).astype(jnp.float32)
+
+
 def _embed_tokens(params, cfg, batch):
     """Returns [B, S_total, D] activations in compute dtype."""
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -200,8 +216,7 @@ def lm_prefill(params, batch, cfg, s_max: int,
 
     x, block_caches = jax.lax.scan(body, x, params["blocks"])
     x = apply_norm(x, params["final_norm"], cfg.norm)
-    head = _lm_head(params, cfg)
-    logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = _head_logits(params, cfg, x[:, -1])
     return logits, {"first": first_caches, "blocks": block_caches}
 
 
@@ -224,6 +239,5 @@ def lm_decode_step(params, token, caches, pos, cfg):
 
     x, block_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
     x = apply_norm(x, params["final_norm"], cfg.norm)
-    head = _lm_head(params, cfg)
-    logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = _head_logits(params, cfg, x[:, -1])
     return logits, {"first": first_caches, "blocks": block_caches}

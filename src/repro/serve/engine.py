@@ -39,11 +39,17 @@ class Request:
 
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
-                 seed: int = 0):
+                 seed: int = 0, backend: Optional[str] = None):
+        """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
+        | "auto") for packed weights: every jitted prefill/decode call runs
+        under ``core.backend.use_backend``, so serving goes through the
+        Pallas block-sparse kernels on TPU (interpret-mode elsewhere)
+        without touching model code.  None keeps the process default."""
         self.api = api
         self.params = params
         self.slots = slots
         self.s_max = s_max
+        self.backend = backend
         self.cfg = api.cfg
         self.key = jax.random.key(seed)
         # batched caches for all slots
@@ -56,6 +62,12 @@ class ServeEngine:
             lambda p, b: api.prefill(p, b, s_max=s_max))
         self._decode = jax.jit(api.decode_step)
         self._stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    def _backend_scope(self):
+        """SME backend context for jitted model calls (trace-time capture:
+        the choice binds on each program's first call)."""
+        from repro.core.backend import use_backend
+        return use_backend(self.backend)
 
     # ---------------------------------------------------------------- slots
     def _free_slot(self) -> Optional[int]:
@@ -76,14 +88,14 @@ class ServeEngine:
         if self.cfg.n_enc_layers:
             batch["frames"] = jnp.zeros(
                 (1, max(len(req.prompt), 2), self.cfg.d_model), jnp.bfloat16)
-        logits, cache1 = self._prefill(self.params, batch)
+        with self._backend_scope():
+            logits, cache1 = self._prefill(self.params, batch)
         self._stats["prefills"] += 1
         tok = self._sample(logits)[0]
         req.out_tokens.append(int(tok))
         # copy the single-sequence cache into the slot of the batched cache
         self.caches = jax.tree.map(
-            lambda full, one: full.at[..., slot:slot + 1, *(slice(None),) * 0]
-            .set(one) if False else _slot_write(full, one, slot),
+            lambda full, one: _slot_write(full, one, slot),
             self.caches, cache1)
         plen = len(req.prompt) + (self.cfg.n_frontend_tokens
                                   if self.cfg.frontend else 0)
@@ -106,9 +118,10 @@ class ServeEngine:
             if r is not None:
                 pos_groups.setdefault(int(self.pos[i]), []).append(i)
         for pos, idxs in sorted(pos_groups.items()):
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(self.last_token), self.caches,
-                jnp.int32(pos))
+            with self._backend_scope():
+                logits, self.caches = self._decode(
+                    self.params, jnp.asarray(self.last_token), self.caches,
+                    jnp.int32(pos))
             self._stats["decode_steps"] += 1
             toks = self._sample(logits)
             for i in idxs:
