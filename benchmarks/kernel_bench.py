@@ -167,5 +167,63 @@ def bench_backend_matrix() -> List[Row]:
     return rows
 
 
+def bench_artifact_io() -> List[Row]:
+    """Offline compiler artifact path: plan / pack+save / load timings.
+
+    The number that matters for serving is load-vs-inline: booting from a
+    ``.smez`` artifact replaces the whole quantize+squeeze+CSC-pack
+    pipeline with an mmap of kernel-ready operands."""
+    import shutil
+    import tempfile
+
+    from repro.compiler import compile_model, load_artifact, plan_model
+    from repro.core.integrate import convert_params_to_sme
+
+    rows: List[Row] = []
+    rng = np.random.default_rng(4)
+    tree = {"layer": {"w": rng.normal(0, 0.05, (1024, 1024))}}
+
+    t0 = time.perf_counter()
+    plan = plan_model(tree, error_budget=0.06)
+    rows.append(("artifact/plan_ms",
+                 round((time.perf_counter() - t0) * 1e3, 1),
+                 f"{len(plan.layers)} layers, trial-measured grid"))
+
+    tmp = tempfile.mkdtemp()
+    try:
+        out = tmp + "/bench.smez"
+        t0 = time.perf_counter()
+        compile_model(tree, plan=plan, out=out)
+        rows.append(("artifact/pack_save_ms",
+                     round((time.perf_counter() - t0) * 1e3, 1),
+                     "convert_params_to_sme + payload write"))
+
+        t0 = time.perf_counter()
+        params, _, _ = load_artifact(out)
+        rows.append(("artifact/load_mmap_ms",
+                     round((time.perf_counter() - t0) * 1e3, 1),
+                     "manifest parse + lazy mmap views"))
+        t0 = time.perf_counter()
+        touched = sum(int(np.asarray(v).sum(dtype=np.int64))
+                      for v in params["layer"]["w"].values()
+                      if np.issubdtype(np.asarray(v).dtype, np.integer))
+        rows.append(("artifact/load_touch_ms",
+                     round((time.perf_counter() - t0) * 1e3, 1),
+                     f"page in every payload byte (checksum {touched % 997})"))
+
+        t0 = time.perf_counter()
+        convert_params_to_sme(tree, plan=plan)
+        inline_ms = (time.perf_counter() - t0) * 1e3
+        rows.append(("artifact/inline_convert_ms", round(inline_ms, 1),
+                     "what every boot pays without the artifact"))
+        disk = sum(f.stat().st_size for f in
+                   __import__("pathlib").Path(out).rglob("*") if f.is_file())
+        rows.append(("artifact/disk_mb", round(disk / 1e6, 2),
+                     "1024x1024 layer, plan-chosen backend operands"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
 ALL = [bench_sme_spmm_numerics, bench_decode_bandwidth_model,
-       bench_dense_vs_sme_xla, bench_backend_matrix]
+       bench_dense_vs_sme_xla, bench_backend_matrix, bench_artifact_io]

@@ -166,6 +166,47 @@ def bench_fig8_squeeze() -> List[Row]:
     return rows
 
 
+# ------------------------------------------------- Fig. 8/11, planned per-layer
+def bench_fig8_planned() -> List[Row]:
+    """Per-layer compiler planning vs the single-setting sweep above.
+
+    ``bench_fig8_squeeze`` applies one global squeeze depth to every layer;
+    the compiler (``repro.compiler.plan``) gives each layer its own
+    ``(n_bits, window, squeeze)`` under one global error budget, so layers
+    whose bit patterns tolerate deeper squeeze stop subsidizing the ones
+    that do not — the per-layer (not single-setting) crossbar reductions
+    the paper's Fig. 8/11 tables are about.  Costs flow through
+    ``hardware.reram_model.summarize_plan``.
+    """
+    from repro.compiler import plan_model
+    from repro.hardware.reram_model import summarize_plan
+
+    task = get_task()
+    cfg = ReRAMConfig()
+    mats = _conv_mats(task, "resnet", min_cols=128)
+    tree = {name: {"w": w} for name, w in mats}
+    pred = lambda path, leaf: path[-1] == "w" and leaf.ndim == 2
+    base = sum(conventional_crossbar_total(w.shape, 8) for _, w in mats)
+    rows: List[Row] = [("fig8_planned/int8_baseline_crossbars", base, "")]
+    plan = None
+    for budget in (0.03, 0.06, 0.10):
+        plan = plan_model(tree, error_budget=budget, predicate=pred,
+                          reorder=False, backend=None, objective="energy")
+        s = summarize_plan(cfg, plan)
+        rows.append((f"fig8_planned/budget{budget:g}/crossbars",
+                     s["crossbars"],
+                     f"{base / max(s['crossbars'], 1):.2f}x vs int8 dense; "
+                     f"weighted_err={plan.weighted_error():.4f}"))
+        rows.append((f"fig8_planned/budget{budget:g}/energy_nj",
+                     round(s["energy_nj"], 1), "per-layer settings"))
+    # per-layer breakdown at the loosest budget: the point of planning
+    for key, lp in sorted(plan.layers.items()):
+        rows.append((f"fig8_planned/layer/{key}/crossbar_reduction",
+                     round(lp.crossbar_reduction, 3),
+                     f"Nq={lp.n_bits} S={lp.window} x={lp.squeeze}"))
+    return rows
+
+
 # -------------------------------------------------------------------- Fig. 9
 def bench_fig9_sweetspot() -> List[Row]:
     task = get_task()
@@ -267,6 +308,7 @@ ALL = [
     bench_table2_accuracy_sparsity,
     bench_fig7_efficiency,
     bench_fig8_squeeze,
+    bench_fig8_planned,
     bench_fig9_sweetspot,
     bench_fig10_overhead,
     bench_fig11_mixed_precision,

@@ -1,0 +1,420 @@
+"""Per-layer squeeze planning (compiler stage 1, DESIGN.md §4).
+
+One global ``(n_bits, window, squeeze)`` setting leaves savings on the
+table: bit-slice sparsity varies wildly across layers (Zhang et al.,
+arXiv:1909.08496), so the layer that tolerates ``squeeze=2`` at no
+accuracy cost subsidizes the one that cannot.  ``plan_model`` searches a
+candidate grid per eligible weight and allocates a *global* accuracy
+budget across layers greedily over the error/bytes frontier:
+
+  1. every layer starts at its most accurate candidate;
+  2. candidate "upgrades" (fewer bytes, more error) are applied in order
+     of bytes-saved per unit of added weighted error, while the
+     weight-count-weighted mean error bound stays within ``error_budget``.
+
+Per-candidate error is the analytic ``core.squeeze.squeeze_error_bound``
+plus the S-window truncation term (``measure="analytic"``), or the
+measured relative dequant error of a trial compression
+(``measure="trial"``, the default — it also yields exact occupied-tile /
+crossbar counts).  Costs come from the existing hardware models:
+``hardware.reram_model`` prices crossbars/energy (the paper's currency),
+``hardware.tpu_model`` turns bytes/weight into decode seconds (the TPU
+currency); ``objective`` picks which one the greedy minimizes.
+
+The result is a serializable :class:`CompilePlan` that
+``core.integrate.convert_params_to_sme(plan=...)`` executes — one code
+path for inline conversion and the offline ``.smez`` artifact
+(`compiler.artifact`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.squeeze import squeeze_error_bound
+
+__all__ = ["Candidate", "LayerPlan", "CompilePlan", "plan_model",
+           "DEFAULT_CANDIDATES", "candidate_error_bound"]
+
+PLAN_VERSION = 1
+
+#: (n_bits, window, squeeze) grid searched per layer.  All stay within the
+#: uint8 code dtype; squeeze>=1 / window<=3 rows are minifloat-6 (v2)
+#: eligible, the rest serve through v1/xla.
+DEFAULT_CANDIDATES: Tuple[Tuple[int, int, int], ...] = (
+    (8, 3, 0), (8, 3, 1), (8, 3, 2), (8, 2, 1), (8, 2, 2), (8, 2, 3),
+    (6, 3, 1), (6, 2, 2),
+)
+
+
+def candidate_error_bound(n_bits: int, window: int, squeeze: int) -> float:
+    """Analytic per-weight value-domain error bound of one setting.
+
+    S-window truncation drops bits below the window anchored at the
+    leading one (worst case ~2^-(window+1) relative, taken at magnitude
+    1 for an absolute bound in [0, 1)); squeeze-out adds the dropped-LSB
+    bound from ``core.squeeze.squeeze_error_bound``.
+    """
+    return 2.0 ** -(window + 1) + squeeze_error_bound(n_bits, squeeze)
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One evaluated (n_bits, window, squeeze) setting for one layer."""
+
+    n_bits: int
+    window: int
+    squeeze: int
+    error: float                   # bound (analytic) or measured rel err
+    bytes_per_weight: float
+    crossbars: int
+    backend: Optional[str]         # operand set this setting serves through
+    tiles: int = 0                 # occupied 128x128 tiles (CSC entries)
+    reorder_gain: int = 0          # occupied tiles freed by row reordering
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """Chosen compression setting + predicted stats for one weight."""
+
+    path: str                      # "/"-joined tree path of the weight leaf
+    shape: Tuple[int, int]         # (K, N) of one 2-D slice
+    n_slices: int = 1              # leading stacked dims flattened (MoE [E])
+    n_bits: int = 8
+    window: int = 3
+    squeeze: int = 1
+    backend: Optional[str] = None  # "v1" | "v2" | None (no operands)
+    reorder: bool = False
+    # stats of the chosen candidate (per 2-D slice)
+    error_bound: float = 0.0
+    bytes_per_weight: float = 0.0
+    crossbars: int = 0
+    crossbars_dense: int = 0       # conventional mapping baseline
+    occupied_tiles: int = 0        # CSC entries before reordering
+    occupied_tiles_reordered: int = 0   # after (== occupied_tiles if not)
+    total_tiles: int = 0
+
+    @property
+    def n_weights(self) -> int:
+        return self.n_slices * self.shape[0] * self.shape[1]
+
+    @property
+    def crossbar_reduction(self) -> float:
+        return self.crossbars_dense / max(self.crossbars, 1)
+
+
+@dataclasses.dataclass
+class CompilePlan:
+    """Serializable output of ``plan_model``; executed by
+    ``convert_params_to_sme(plan=...)`` and stored in ``.smez`` manifests."""
+
+    layers: Dict[str, LayerPlan]
+    tile: Tuple[int, int] = (128, 128)
+    error_budget: float = 0.0
+    objective: str = "bytes"
+    version: int = PLAN_VERSION
+
+    # ------------------------------------------------------------- queries
+    def for_path(self, path) -> Optional[LayerPlan]:
+        """Plan for a tree path (sequence of keys or pre-joined string)."""
+        key = path if isinstance(path, str) else "/".join(map(str, path))
+        return self.layers.get(key)
+
+    def weighted_error(self) -> float:
+        """Weight-count-weighted mean of the per-layer error bounds."""
+        tot = sum(lp.n_weights for lp in self.layers.values())
+        if not tot:
+            return 0.0
+        return sum(lp.error_bound * lp.n_weights
+                   for lp in self.layers.values()) / tot
+
+    def total_bytes(self) -> float:
+        return sum(lp.bytes_per_weight * lp.n_weights
+                   for lp in self.layers.values())
+
+    def summary(self) -> Dict[str, float]:
+        xb = sum(lp.crossbars * lp.n_slices for lp in self.layers.values())
+        xbd = sum(lp.crossbars_dense * lp.n_slices
+                  for lp in self.layers.values())
+        return {
+            "layers": len(self.layers),
+            "weighted_error": self.weighted_error(),
+            "total_bytes": self.total_bytes(),
+            "crossbars": xb,
+            "crossbars_dense": xbd,
+            "crossbar_reduction": xbd / max(xb, 1),
+            "reordered_layers": sum(lp.reorder for lp in self.layers.values()),
+            "tiles_freed_by_reorder": sum(
+                lp.occupied_tiles - lp.occupied_tiles_reordered
+                for lp in self.layers.values()),
+        }
+
+    # ------------------------------------------------------- serialization
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["tile"] = list(self.tile)
+        for lp in d["layers"].values():
+            lp["shape"] = list(lp["shape"])
+        return json.dumps(d, indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CompilePlan":
+        d = json.loads(s)
+        if d.get("version", 0) > PLAN_VERSION:
+            raise ValueError(
+                f"plan version {d.get('version')} is newer than supported "
+                f"{PLAN_VERSION}")
+        layers = {
+            k: LayerPlan(**{**v, "shape": tuple(v["shape"])})
+            for k, v in d["layers"].items()
+        }
+        return cls(layers=layers, tile=tuple(d.get("tile", (128, 128))),
+                   error_budget=d.get("error_budget", 0.0),
+                   objective=d.get("objective", "bytes"),
+                   version=d.get("version", PLAN_VERSION))
+
+
+# --------------------------------------------------------------------------
+# candidate evaluation
+# --------------------------------------------------------------------------
+def _pick_backend(backend: Optional[str], n_bits: int, window: int,
+                  squeeze: int) -> Optional[str]:
+    """Which operand set a setting serves through."""
+    if backend in (None, "xla"):
+        return None
+    from repro.core.backend import SpmmV2Backend
+    v2_ok = SpmmV2Backend.supports_settings(n_bits, window, squeeze)
+    if backend == "auto":
+        return "v2" if v2_ok else "v1"
+    if backend == "v2" and not v2_ok:
+        return "v1"
+    return backend
+
+
+def _storage_bytes_per_weight(smew, backend: Optional[str]) -> float:
+    if backend == "v2":
+        # minifloat-6 payload: 0.75 B/code on occupied tiles + metadata
+        tr, tc = smew.tile
+        occ = int(smew.occupancy.sum())
+        payload = occ * tr * tc * 6
+        meta = occ * (tr * 8 + 32)
+        return (payload + meta) / smew.n_weights / 8
+    fmt = "bytecode" if backend == "v1" else "planes"
+    return smew.storage_bits_per_weight(fmt) / 8
+
+
+def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
+                    tile, backend: Optional[str],
+                    reorder_gain: int = 0) -> Candidate:
+    from repro.core.sme import sme_compress
+    smew = sme_compress(w2d, n_bits=n_bits, window=window, squeeze=squeeze,
+                        tile=tile)
+    # relative Frobenius dequant error: an accuracy proxy on the same scale
+    # across layers regardless of their magnitude
+    err = float(np.linalg.norm(smew.dequant() - w2d)
+                / max(np.linalg.norm(w2d), 1e-12))
+    be = _pick_backend(backend, n_bits, window, squeeze)
+    gain = reorder_gain
+    return Candidate(
+        n_bits=n_bits, window=window, squeeze=squeeze, error=err,
+        bytes_per_weight=_storage_bytes_per_weight(smew, be),
+        crossbars=smew.crossbars_used(), backend=be,
+        tiles=int(smew.occupancy.sum()), reorder_gain=gain)
+
+
+def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
+                       tile, backend: Optional[str]) -> Candidate:
+    """Shape-only evaluation (dry-run / abstract trees): occupancy unknown,
+    assume all live planes occupied — a pessimistic crossbar count and an
+    exact byte count for the dense-tile worst case."""
+    k, n = shape
+    nr, nc = -(-k // tile[0]), -(-n // tile[1])
+    live = n_bits - squeeze
+    be = _pick_backend(backend, n_bits, window, squeeze)
+    tiles = nr * nc
+    if be == "v2":
+        bits = (tiles * tile[0] * tile[1] * 6 + tiles * (tile[0] * 8 + 32)) \
+            / (k * n)
+    elif be == "v1":
+        bits = (tiles * tile[0] * tile[1] * 8 + tiles * (tile[0] * 8 + 32)
+                + k * n) / (k * n)
+    else:
+        bits = (tiles * tile[0] * tile[1] * live + tiles * (tile[0] * 8 + 32)
+                + k * n) / (k * n)
+    return Candidate(
+        n_bits=n_bits, window=window, squeeze=squeeze,
+        error=candidate_error_bound(n_bits, window, squeeze),
+        bytes_per_weight=bits / 8, crossbars=tiles * live, backend=be,
+        tiles=tiles)
+
+
+def _candidate_cost(c: Candidate, n_weights: int, objective: str) -> float:
+    """Scalar cost the greedy minimizes, via the hardware models."""
+    if objective == "energy":
+        from repro.hardware.reram_model import LayerMapping, ReRAMConfig, energy_nj
+        m = LayerMapping(name="", crossbars=max(c.crossbars, 1),
+                         input_bits=c.n_bits + c.squeeze, activations=1)
+        return energy_nj(ReRAMConfig(), [m])
+    # "bytes": HBM traffic per decoded token -> seconds on the TPU roofline
+    from repro.hardware.tpu_model import V5E
+    return c.bytes_per_weight * n_weights / V5E.hbm_bw
+
+
+# --------------------------------------------------------------------------
+# the planner
+# --------------------------------------------------------------------------
+def _default_eligible(path_names, leaf) -> bool:
+    from repro.core.integrate import _eligible
+    return _eligible(path_names, leaf)
+
+
+def _collect_layers(params, predicate):
+    """[(path_key, leaf_np or ShapeDtypeStruct)] of eligible weight leaves."""
+    found = []
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            for key, sub in tree.items():
+                walk(sub, path + [key])
+            return
+        if isinstance(tree, (list, tuple)):
+            for i, sub in enumerate(tree):
+                walk(sub, path + [str(i)])
+            return
+        if hasattr(tree, "shape") and predicate(path, tree):
+            found.append(("/".join(path), tree))
+
+    walk(params, [])
+    return found
+
+
+def plan_model(params, error_budget: float = 0.05,
+               candidates: Sequence[Tuple[int, int, int]] = DEFAULT_CANDIDATES,
+               tile: Tuple[int, int] = (128, 128), measure: str = "trial",
+               predicate=None, backend: Optional[str] = "auto",
+               reorder: bool = True, objective: str = "bytes") -> CompilePlan:
+    """Search per-layer settings under a global accuracy budget.
+
+    ``error_budget`` caps the weight-count-weighted mean per-layer error
+    (measured relative Frobenius dequant error in ``measure="trial"``,
+    analytic bound in ``measure="analytic"``).  Every layer starts at its
+    most accurate candidate unconditionally — the budget gates *upgrades*
+    (cheaper, lossier settings), so a budget below the floor of the
+    candidate grid degrades gracefully to the most accurate plan instead
+    of refusing to compress.  ``backend="auto"`` records the
+    operand set each chosen setting serves through (v2 when minifloat-6
+    eligible); ``reorder=True`` marks 2-D layers whose trial permutation
+    strictly frees occupied tiles.  Returns a :class:`CompilePlan`.
+
+    Stacked weights (MoE ``[E, D, F]``) are trial-measured on slice 0
+    only — one setting per leaf keeps the operand arrays rectangular,
+    and expert slices share an init/training distribution, but a leaf
+    whose slice 0 is atypically compressible can understate the leaf's
+    true error; tighten ``error_budget`` if experts are known to diverge.
+    """
+    if measure not in ("trial", "analytic"):
+        raise ValueError(f"measure must be 'trial'|'analytic', got {measure!r}")
+    predicate = predicate or _default_eligible
+    from repro.core.mapping import conventional_crossbar_total
+
+    leaves = _collect_layers(params, predicate)
+    per_layer: Dict[str, List[Candidate]] = {}
+    meta: Dict[str, Tuple[Tuple[int, int], int]] = {}
+    for key, leaf in leaves:
+        shape2d = tuple(int(s) for s in leaf.shape[-2:])
+        n_slices = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
+            if len(leaf.shape) > 2 else 1
+        stacked = n_slices > 1
+        w = np.asarray(leaf, np.float64).reshape((-1,) + shape2d)[0] \
+            if measure == "trial" else None
+        gains = {}            # reorder gain depends only on (n_bits, window)
+        cands = []
+        for nb, win, sq in candidates:
+            if measure == "trial":
+                if reorder and not stacked and (nb, win) not in gains:
+                    from .reorder import permutation_gain
+                    from repro.core.quant import quantize
+                    q = quantize(w, method="sme", n_bits=nb, window=win)
+                    before, after = permutation_gain(q.codes, tile=tile)
+                    gains[nb, win] = before - after
+                c = _evaluate_trial(w, nb, win, sq, tile, backend,
+                                    reorder_gain=gains.get((nb, win), 0))
+            else:
+                c = _evaluate_analytic(shape2d, nb, win, sq, tile, backend)
+            cands.append(c)
+        # error/bytes frontier: drop candidates dominated on both axes
+        cands.sort(key=lambda c: (c.error, c.bytes_per_weight))
+        frontier: List[Candidate] = []
+        for c in cands:
+            if not frontier or c.bytes_per_weight < \
+                    frontier[-1].bytes_per_weight - 1e-12:
+                frontier.append(c)
+        per_layer[key] = frontier
+        meta[key] = (shape2d, n_slices)
+
+    # greedy allocation over the frontier
+    choice = {key: 0 for key in per_layer}          # start: most accurate
+    total_w = sum(meta[k][0][0] * meta[k][0][1] * meta[k][1] for k in per_layer)
+
+    def werr() -> float:
+        if not total_w:
+            return 0.0
+        return sum(per_layer[k][choice[k]].error
+                   * meta[k][0][0] * meta[k][0][1] * meta[k][1]
+                   for k in per_layer) / total_w
+
+    blocked = set()                # (key, j) upgrades that bust the budget
+    while True:
+        best = None
+        for key, frontier in per_layer.items():
+            i = choice[key]
+            nw = meta[key][0][0] * meta[key][0][1] * meta[key][1]
+            cur_cost = _candidate_cost(frontier[i], nw, objective)
+            # scan the whole remaining frontier, not just i+1: under the
+            # "energy" objective cost is not monotone along the
+            # bytes-sorted frontier, so a cheaper candidate may sit past
+            # a more expensive one
+            for j in range(i + 1, len(frontier)):
+                if (key, j) in blocked:
+                    continue
+                nxt = frontier[j]
+                d_cost = cur_cost - _candidate_cost(nxt, nw, objective)
+                if d_cost <= 0:
+                    continue
+                d_err = max((nxt.error - frontier[i].error) * nw
+                            / max(total_w, 1), 1e-18)
+                gain = d_cost / d_err
+                if best is None or gain > best[0]:
+                    best = (gain, key, j)
+        if best is None:
+            break
+        _, key, j = best
+        prev = choice[key]
+        choice[key] = j
+        if werr() > error_budget:
+            # undo; total error only grows, so this jump never fits later
+            choice[key] = prev
+            blocked.add((key, j))
+
+    layers: Dict[str, LayerPlan] = {}
+    for key, frontier in per_layer.items():
+        c = frontier[choice[key]]
+        shape2d, n_slices = meta[key]
+        nr, nc = -(-shape2d[0] // tile[0]), -(-shape2d[1] // tile[1])
+        layers[key] = LayerPlan(
+            path=key, shape=shape2d, n_slices=n_slices,
+            n_bits=c.n_bits, window=c.window, squeeze=c.squeeze,
+            backend=c.backend, reorder=bool(c.reorder_gain > 0),
+            error_bound=c.error, bytes_per_weight=c.bytes_per_weight,
+            crossbars=c.crossbars,
+            crossbars_dense=conventional_crossbar_total(shape2d, c.n_bits,
+                                                        tile=tile),
+            occupied_tiles=c.tiles,
+            occupied_tiles_reordered=c.tiles - max(c.reorder_gain, 0),
+            total_tiles=nr * nc,
+        )
+    return CompilePlan(layers=layers, tile=tile, error_budget=error_budget,
+                       objective=objective)

@@ -1,0 +1,94 @@
+"""Tile-densifying row reordering (compiler stage 2, DESIGN.md §4).
+
+Bit-slice sparsity is only worth crossbars/DMA when it aligns into whole
+empty 128x128 tiles — a matrix whose zeros are scattered across tiles
+occupies every tile even at 90% weight sparsity.  Permuting the K rows of
+``w`` so that rows with the same *column-block* sparsity pattern become
+contiguous packs the zeros into full tiles, which the CSC-of-tiles format
+(`core.sme.SMEWeight.pack_csc`) and the Pallas kernels then skip outright.
+The same idea drives crossbar-side row clustering in the reordering
+literature (Yang et al., arXiv:2511.14202; Zhang et al., arXiv:1909.08496
+for the per-layer bit-slice variance it exploits).
+
+Correctness: for a permutation ``p``, ``x[..., p] @ w[p, :] == x @ w``
+exactly, so the compiled param carries ``sme_perm = p`` and
+``core.backend.sme_apply`` gathers the input once before dispatch — model
+outputs are unchanged to the last bit (per-tensor quantization scales are
+permutation-invariant, so even the quantized codes commute with ``p``).
+
+The heuristic is occupancy clustering: per row, the boolean signature of
+which column tiles it touches; rows sort lexicographically by signature
+(identical patterns become contiguous, near-identical adjacent).  It never
+helps less than the identity ordering by more than tie-breaking noise, and
+``permutation_gain`` reports the occupied-tile delta so the planner only
+keeps permutations that actually free tiles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.quant import quantize
+
+__all__ = [
+    "row_block_signature", "permutation_from_codes", "plan_row_permutation",
+    "occupied_tile_count", "permutation_gain",
+]
+
+
+def row_block_signature(codes: np.ndarray,
+                        tile: Tuple[int, int] = (128, 128)) -> np.ndarray:
+    """bool [K, nc]: does row k have any non-zero code in column block j?"""
+    k, n = codes.shape
+    tc = tile[1]
+    nc = -(-n // tc)
+    padded = np.zeros((k, nc * tc), dtype=bool)
+    padded[:, :n] = codes != 0
+    return padded.reshape(k, nc, tc).any(axis=-1)
+
+
+def permutation_from_codes(codes: np.ndarray,
+                           tile: Tuple[int, int] = (128, 128)) -> np.ndarray:
+    """Row permutation that clusters rows by column-block sparsity pattern.
+
+    Lexicographic sort over the per-row block signature (primary key =
+    leftmost block, final tiebreak = occupied-block count) — rows sharing a
+    pattern land contiguously, so blocks none of them touch become whole
+    empty tiles.  Deterministic; stable within equal signatures.
+    """
+    sig = row_block_signature(codes, tile)
+    # np.lexsort sorts by the LAST key first: put block 0 last (primary),
+    # and the popcount first (least-significant tiebreak).
+    keys = (sig.sum(axis=1),) + tuple(sig[:, j] for j in range(sig.shape[1] - 1, -1, -1))
+    return np.lexsort(keys).astype(np.int32)
+
+
+def plan_row_permutation(w: np.ndarray, n_bits: int = 8, window: int = 3,
+                         tile: Tuple[int, int] = (128, 128),
+                         method: str = "sme") -> np.ndarray:
+    """Permutation for a *real* weight matrix: quantize, then cluster codes.
+
+    Quantization happens before signature extraction because the squeeze /
+    tile-skip machinery sees codes, not floats — a float zero and a
+    below-threshold float are the same empty cell.
+    """
+    q = quantize(np.asarray(w, np.float64), method=method, n_bits=n_bits,
+                 window=window)
+    return permutation_from_codes(q.codes, tile)
+
+
+def occupied_tile_count(codes: np.ndarray,
+                        tile: Tuple[int, int] = (128, 128)) -> int:
+    """Number of non-empty (tile_row, tile_col) tiles = CSC entries."""
+    from repro.core.bitslice import tile_codes
+    return int(tile_codes(codes, tile).any(axis=(-1, -2)).sum())
+
+
+def permutation_gain(codes: np.ndarray, perm: Optional[np.ndarray] = None,
+                     tile: Tuple[int, int] = (128, 128)) -> Tuple[int, int]:
+    """(occupied tiles before, after) applying ``perm`` (computed if None)."""
+    if perm is None:
+        perm = permutation_from_codes(codes, tile)
+    return (occupied_tile_count(codes, tile),
+            occupied_tile_count(codes[perm], tile))

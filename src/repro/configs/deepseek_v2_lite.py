@@ -4,7 +4,7 @@
 first layer dense (d_ff=10944), 26 MoE layers: 64 routed experts top-6 +
 2 shared, expert d_ff=1408.  The assignment line's "160 routed" is the
 full V2 config; the primary spec "MoE 64e top-6" matches V2-Lite and is
-used (DESIGN.md §4).
+used.
 """
 from .base import ModelConfig
 

@@ -50,7 +50,8 @@ __all__ = [
     "SMEBackend", "register_backend", "get_backend", "available_backends",
     "default_backend", "set_default_backend", "use_backend",
     "resolve_backend", "sme_apply", "smeweight_from_param",
-    "pack_param_operands", "operand_keys", "clear_operand_cache",
+    "pack_param_operands", "operand_keys", "ensure_operands",
+    "clear_operand_cache",
 ]
 
 _META_DEFAULTS = {"sme_nbits": 8, "sme_squeezed": 1, "sme_window": 3}
@@ -206,7 +207,7 @@ def _v2_eligible(param: dict) -> bool:
     if not all(_is_concrete(m) for m in meta):
         return False
     nbits, squeezed, window = (int(np.asarray(m).reshape(-1)[0]) for m in meta)
-    return squeezed >= 1 and window <= 3 and (nbits - squeezed) <= 7
+    return SpmmV2Backend.supports_settings(nbits, window, squeezed)
 
 
 def resolve_backend(param: Optional[dict] = None,
@@ -256,6 +257,35 @@ def pack_param_operands(param: dict, backend: SMEBackend) -> Dict[str, jax.Array
 def operand_keys(backend_name: str) -> Tuple[str, ...]:
     be = get_backend(backend_name)
     return tuple(be.key(op) for op in be.OPERANDS)
+
+
+def ensure_operands(params, backend_name: str):
+    """Return ``params`` with ``backend_name``'s kernel operands present on
+    every SME-packed weight, packing any that are missing (concrete arrays
+    required).  Used when an artifact compiled without operands is served
+    with an explicit kernel backend: packing here, once at boot, is the
+    only alternative to ``sme_apply`` silently falling back to xla inside
+    the jitted program (where raw codes are traced and cannot be packed).
+    """
+    be = get_backend(backend_name)
+    if not be.OPERANDS:
+        return params
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "sme_codes" in tree:
+                if be.has_operands(tree):
+                    return tree
+                out = dict(tree)
+                out.update({be.key(op): arr for op, arr in
+                            pack_param_operands(tree, be).items()})
+                return out
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(s) for s in tree)
+        return tree
+
+    return walk(params)
 
 
 # weight identity -> packed operands; validated by weakref so a recycled
@@ -357,9 +387,14 @@ class SpmmV2Backend(SMEBackend):
     name = "v2"
     OPERANDS = ("packed", "rowscale", "rowid", "nnz")
 
+    @staticmethod
+    def supports_settings(n_bits: int, window: int, squeeze: int) -> bool:
+        """The one authoritative minifloat-6 format constraint — the
+        compiler's planner and ``resolve_backend`` both consult it."""
+        return squeeze >= 1 and window <= 3 and (n_bits - squeeze) <= 7
+
     def supports(self, smew):
-        return (smew.squeezed >= 1 and smew.window <= 3
-                and smew.live_bits <= 7)
+        return self.supports_settings(smew.n_bits, smew.window, smew.squeezed)
 
     def pack_weight(self, smew, pad_to=None):
         from .minifloat import encode6, pack6
@@ -422,7 +457,6 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
         out_dtype = x.dtype
     lead = _param_lead(param)
     k, n = _param_kn(param)
-
     ops: Optional[Dict[str, jax.Array]] = None
     if be.OPERANDS:
         if be.has_operands(param):
@@ -431,6 +465,15 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
             ops = _cached_operands(param, be)
         else:
             be = get_backend("xla")   # traced raw codes: cannot pack here
+
+    if "sme_perm" in param and be.OPERANDS:
+        # compiler-reordered weight: kernel operands hold W[perm, :], so
+        # gather the input once to match — x[..., p] @ W[p, :] == x @ W
+        # exactly (compiler.reorder; DESIGN.md §4).  The operand-free xla
+        # path needs no gather: sme_dequant_jnp restores the row order
+        # itself (checked after the traced-codes fallback above so a
+        # downgraded call never compensates twice).
+        x = jnp.take(x, param["sme_perm"], axis=-1)
 
     if not be.OPERANDS:               # xla: dequant handles lead dims itself
         from .integrate import sme_dequant_jnp

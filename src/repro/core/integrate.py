@@ -32,15 +32,20 @@ __all__ = ["pack_sme_param", "convert_params_to_sme", "sme_dequant_jnp",
 
 
 def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
-                   tile=(128, 128), backend=None) -> dict:
+                   tile=(128, 128), backend=None, row_perm=None) -> dict:
     """Compress one 2-D weight to the raw packed-dict format.
 
     ``backend`` ("v1" | "v2" | "all" | None) additionally emits that
     execution backend's kernel-ready CSC operands under ``sme_<name>_*``
     keys, so serving never packs at call time (DESIGN.md §3).
+
+    ``row_perm`` packs the tile-densified layout ``w2d[row_perm]`` and
+    records the permutation under ``sme_perm`` so ``sme_apply`` gathers
+    the input to match (DESIGN.md §4; ``compiler.reorder``).
     """
     smew = sme_compress(np.asarray(w2d, np.float64), n_bits=n_bits,
-                        window=window, squeeze=squeeze, tile=tile)
+                        window=window, squeeze=squeeze, tile=tile,
+                        row_perm=row_perm)
     k, n = smew.shape
     out = {
         "sme_codes": smew.tiled_codes,                       # [nr,nc,tr,tc] u8
@@ -52,6 +57,8 @@ def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
         "sme_squeezed": np.asarray(squeeze, np.int32),       # ()
         "sme_window": np.asarray(window, np.int32),          # ()
     }
+    if row_perm is not None:
+        out["sme_perm"] = np.asarray(row_perm, np.int32)     # [K]
     for name in _backend_names(backend):
         from .backend import get_backend
         be = get_backend(name)
@@ -83,13 +90,21 @@ def _eligible(path_names, leaf) -> bool:
 
 
 def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
-                          tile=(128, 128), predicate=None, backend=None):
+                          tile=(128, 128), predicate=None, backend=None,
+                          plan=None):
     """Returns a new param tree with eligible weights SME-packed.
 
     ``backend`` ("v1" | "v2" | "all" | None) also emits kernel-ready CSC
     operands per weight (stacked expert dims share one padded list length
     so the operand arrays stay rectangular); ``core.backend.sme_apply``
     then dispatches with zero call-time packing.
+
+    ``plan`` (a :class:`repro.compiler.plan.CompilePlan`) overrides the
+    global setting per layer: each eligible weight uses its
+    ``LayerPlan``'s ``(n_bits, window, squeeze, backend)`` and, when the
+    plan marks it, the tile-densifying row reordering — this is the one
+    code path shared by inline conversion and the offline ``.smez``
+    compiler (DESIGN.md §4).
     """
     predicate = predicate or _eligible
 
@@ -105,16 +120,27 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
         leaf = np.asarray(tree)
         if not predicate(path, leaf):
             return tree
+        lp = plan.for_path(path) if plan is not None else None
+        nb, win, sq = (lp.n_bits, lp.window, lp.squeeze) if lp \
+            else (n_bits, window, squeeze)
+        layer_backend = lp.backend if lp else backend
         lead = leaf.shape[:-2]
         k, n = leaf.shape[-2:]
         flat = leaf.reshape((-1, k, n))
-        packed = [pack_sme_param(flat[i], n_bits, window, squeeze, tile)
+        perm = None
+        if lp is not None and lp.reorder and not lead:
+            # reordering is 2-D only: stacked slices would each want their
+            # own permutation, but share one input gather
+            from repro.compiler.reorder import plan_row_permutation
+            perm = plan_row_permutation(flat[0], n_bits=nb, window=win,
+                                        tile=tile)
+        packed = [pack_sme_param(flat[i], nb, win, sq, tile, row_perm=perm)
                   for i in range(flat.shape[0])]
         # meta keys stack too (shape == lead): model code may lax.scan over
         # stacked layers, which slices every leaf along the leading axis
         stacked = {key: np.stack([p[key] for p in packed]).reshape(
             lead + packed[0][key].shape) for key in packed[0]}
-        for name in _backend_names(backend):
+        for name in _backend_names(layer_backend):
             from .backend import get_backend, pack_param_operands
             be = get_backend(name)
             for op, arr in pack_param_operands(stacked, be).items():
@@ -155,6 +181,12 @@ def sme_dequant_jnp(p: dict, n_bits=None, dtype=jnp.bfloat16):
     sign = 1.0 - 2.0 * bits.reshape(sb.shape[:-1] + (sb.shape[-1] * 8,)
                                     )[..., :n].astype(jnp.float32)
     w = w * sign * p["sme_scale"]
+    if "sme_perm" in p:
+        # compiler-reordered param: codes hold W[perm, :]; return the
+        # original row order so every direct consumer (lm_head tying,
+        # XLA backend matmul) sees W unchanged — only the kernel
+        # backends keep the permuted layout and gather x instead
+        w = jnp.take(w, jnp.argsort(p["sme_perm"]), axis=-2)
     return w.astype(dtype)
 
 

@@ -261,10 +261,20 @@ def sme_compress(
     tile: Tuple[int, int] = (128, 128),
     channel_axis: Optional[int] = None,
     method: str = "sme",
+    row_perm: Optional[np.ndarray] = None,
 ) -> SMEWeight:
-    """Run the full SME pipeline on a real weight matrix ``w[K, N]``."""
+    """Run the full SME pipeline on a real weight matrix ``w[K, N]``.
+
+    ``row_perm`` compresses ``w[row_perm, :]`` instead — the compiler's
+    tile-densifying reordering (``compiler.reorder``).  The result then
+    represents the *permuted* layout: callers must gather the input with
+    the same permutation (``x[..., row_perm]``), which ``sme_apply`` does
+    when the packed param carries ``sme_perm``.
+    """
     if w.ndim != 2:
         raise ValueError("sme_compress expects a 2-D weight matrix")
+    if row_perm is not None:
+        w = np.asarray(w)[np.asarray(row_perm)]
     q: QuantizedTensor = quantize(
         w, method=method, n_bits=n_bits, window=window, channel_axis=channel_axis
     )

@@ -8,16 +8,17 @@ model: absolute constants below are order-of-magnitude values assembled from
 the ISAAC paper and CACTI-class estimates; every paper figure normalizes to
 a baseline, so only ratios matter.
 
-Adaptation note (DESIGN.md §7): this model exists to reproduce the paper's
+Adaptation note: this model exists to reproduce the paper's
 own currency (crossbars, ADC energy, index SRAM).  TPU roofline economics
 live in ``tpu_model.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable
+from typing import Dict, Iterable, Optional
 
-__all__ = ["ReRAMConfig", "LayerMapping", "energy_nj", "area_mm2", "cycles", "summarize"]
+__all__ = ["ReRAMConfig", "LayerMapping", "energy_nj", "area_mm2", "cycles",
+           "summarize", "mapping_from_plan", "summarize_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +102,36 @@ def summarize(cfg: ReRAMConfig, layers: Iterable[LayerMapping]) -> Dict[str, flo
         "area_mm2": area_mm2(cfg, layers),
         "index_bytes": float(sum(l.index_bytes for l in layers)),
     }
+
+
+def mapping_from_plan(layer_plan,
+                      cfg: Optional[ReRAMConfig] = None) -> LayerMapping:
+    """One compiler ``LayerPlan`` -> the resource mapping it implies.
+
+    The compiler (``repro.compiler.plan``) measures per-layer crossbars
+    under each layer's *own* ``(n_bits, squeeze)``; this translates that
+    into the cost model's currency: squeezed layers pay ``Nq + x``
+    bit-serial input cycles (the paper's input-doubling compensation) and
+    the occupancy-bitmap + RCM-register index storage of §III-C.
+    """
+    cfg = cfg or ReRAMConfig()
+    k, n = layer_plan.shape
+    nt = -(-k // cfg.xbar_rows) * -(-n // cfg.xbar_cols)
+    index = (nt * layer_plan.n_bits) // 8 + 1           # occupancy bitmap
+    if layer_plan.squeeze:
+        index += nt * cfg.xbar_rows * 2 // 8            # 2-bit RCM regs
+    return LayerMapping(
+        name=layer_plan.path,
+        crossbars=max(layer_plan.crossbars, 1) * layer_plan.n_slices,
+        input_bits=layer_plan.n_bits + layer_plan.squeeze,
+        activations=1,
+        index_bytes=index * layer_plan.n_slices,
+        edram_bytes=k * layer_plan.n_slices,
+    )
+
+
+def summarize_plan(cfg: ReRAMConfig, plan) -> Dict[str, float]:
+    """Aggregate resources of a whole ``CompilePlan`` — per-layer settings,
+    not one global one, which is what the paper's Fig. 8/11 tables need."""
+    return summarize(cfg, [mapping_from_plan(lp, cfg)
+                           for _, lp in sorted(plan.layers.items())])

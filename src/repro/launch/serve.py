@@ -1,8 +1,11 @@
 """Serving driver: batched requests through the slot engine, optionally with
-SME-compressed weights.
+SME-compressed weights — converted inline, or booted from a compiled
+``.smez`` artifact with zero per-boot packing (DESIGN.md §4).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 6 --max-new 12 [--sme] [--squeeze 1]
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --d-model 256 --d-ff 512 --artifact qwen.smez
 """
 from __future__ import annotations
 
@@ -13,21 +16,26 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_smoke
+from repro.configs import ARCHS
 from repro.models import build_model
 from repro.serve import Request, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHS))
+    from repro.launch.compile import add_scale_args, scaled_config
+    add_scale_args(ap)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--s-max", type=int, default=96)
     ap.add_argument("--sme", action="store_true",
-                    help="serve SME-compressed weights")
+                    help="serve inline SME-compressed weights")
     ap.add_argument("--squeeze", type=int, default=1)
+    ap.add_argument("--artifact", default=None,
+                    help="boot from a compiled .smez artifact (no per-boot "
+                         "packing; see repro.launch.compile)")
     ap.add_argument("--backend",
                     default=os.environ.get("SME_BACKEND", "auto"),
                     choices=["auto", "xla", "v1", "v2"],
@@ -36,25 +44,54 @@ def main():
                          "block-sparse kernels (interpret mode off-TPU)")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch)
+    cfg = scaled_config(args)
     api = build_model(cfg)
-    params = api.init_params(jax.random.key(0))
-    if args.sme:
-        from repro.core.integrate import convert_params_to_sme, sme_storage_summary
-        params_np = jax.tree.map(np.asarray, params)
-        emit = args.backend if args.backend in ("v1", "v2") else None
-        if emit is None and args.backend == "auto" \
-                and jax.default_backend() == "tpu":
-            # auto on TPU serves through the Pallas kernels, which need
-            # operands emitted offline (jitted programs cannot pack)
-            emit = "v2" if args.squeeze >= 1 else "v1"
-        params = convert_params_to_sme(params_np, squeeze=args.squeeze,
-                                       backend=emit)
-        print("SME storage:", sme_storage_summary(params))
-        print(f"SME backend: {args.backend}")
 
-    eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
-                      backend=args.backend if args.sme else None)
+    if args.artifact:
+        from repro.compiler import read_manifest
+        man = read_manifest(args.artifact)
+        art_arch = man.get("extra", {}).get("arch")
+        if art_arch and art_arch != args.arch:
+            raise SystemExit(f"artifact {args.artifact} was compiled for "
+                             f"--arch {art_arch}, not {args.arch}")
+        dims = man.get("extra", {}).get("dims") or {}
+        mine = {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                "vocab": cfg.vocab, "n_layers": cfg.n_layers,
+                "head_dim": cfg.hd}
+        bad = {k: (v, mine[k]) for k, v in dims.items()
+               if k in mine and v != mine[k]}
+        if bad:
+            raise SystemExit(
+                f"artifact {args.artifact} dims do not match this model "
+                f"(artifact vs flags): {bad}; pass the same --d-model/"
+                f"--d-ff/... the artifact was compiled with")
+        kw = {} if args.backend == "auto" else {"backend": args.backend}
+        t0 = time.time()
+        eng = ServeEngine.from_artifact(api, args.artifact,
+                                        slots=args.slots, s_max=args.s_max,
+                                        **kw)
+        print(f"booted from {args.artifact} in {time.time() - t0:.2f}s "
+              f"(plan: {len(eng.plan.layers) if eng.plan else 0} layers, "
+              f"backend={eng.backend})")
+    else:
+        params = api.init_params(jax.random.key(0))
+        if args.sme:
+            from repro.core.integrate import (convert_params_to_sme,
+                                              sme_storage_summary)
+            params_np = jax.tree.map(np.asarray, params)
+            emit = args.backend if args.backend in ("v1", "v2") else None
+            if emit is None and args.backend == "auto" \
+                    and jax.default_backend() == "tpu":
+                # auto on TPU serves through the Pallas kernels, which need
+                # operands emitted offline (jitted programs cannot pack)
+                emit = "v2" if args.squeeze >= 1 else "v1"
+            params = convert_params_to_sme(params_np, squeeze=args.squeeze,
+                                           backend=emit)
+            print("SME storage:", sme_storage_summary(params))
+            print(f"SME backend: {args.backend}")
+        eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
+                          backend=args.backend if args.sme else None)
+
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, size=5 + i % 4,

@@ -2,7 +2,7 @@
 
 All three support (a) full-sequence apply for train/prefill and (b) O(1)
 single-step decode with an explicit state — which is why their architectures
-run the ``long_500k`` cell (DESIGN.md §4).
+run the ``long_500k`` cell.
 
 * Mamba: selective SSM; the full-sequence path is a ``lax.scan`` over time
   (one traced step — compile-friendly at any depth).

@@ -1,7 +1,7 @@
 """Decoder-only LM assembly: embed -> [first dense blocks] -> scan over
 superblocks -> final norm -> chunked-vocab loss / logits.
 
-Compile-time discipline for the multi-pod dry-run (DESIGN.md §5):
+Compile-time discipline for the multi-pod dry-run:
 
 * layers are stacked per superblock *slot* and iterated with ``lax.scan``
   (one traced superblock regardless of depth);

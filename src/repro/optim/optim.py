@@ -3,7 +3,7 @@
 Pure-pytree implementation (no optax in this container).  Optimizer state
 shards exactly like the parameters (same tree structure), so FSDP/TP
 sharding rules apply transparently — this is what makes ZeRO-style
-sharded optimizer state free under pjit (DESIGN.md §5).
+sharded optimizer state free under pjit.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """Sharding rules: map param/cache/batch pytrees -> PartitionSpecs.
 
-Axes (DESIGN.md §5):
+Axes:
   * ``pod``   — data parallelism across pods (gradient all-reduce crosses
                 pods once per step; FSDP never crosses pods);
   * ``data``  — data parallelism + FSDP (ZeRO-3 weight sharding) + SP

@@ -50,6 +50,7 @@ class ServeEngine:
         self.slots = slots
         self.s_max = s_max
         self.backend = backend
+        self.plan = None          # CompilePlan when booted from_artifact
         self.cfg = api.cfg
         self.key = jax.random.key(seed)
         # batched caches for all slots
@@ -62,6 +63,31 @@ class ServeEngine:
             lambda p, b: api.prefill(p, b, s_max=s_max))
         self._decode = jax.jit(api.decode_step)
         self._stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    @classmethod
+    def from_artifact(cls, api, path, *, verify: bool = False, **kw):
+        """Boot from a compiled ``.smez`` artifact (DESIGN.md §4).
+
+        The artifact already holds the packed codes and kernel-ready CSC
+        operands, so there is no per-boot quantize/pack work — leaves are
+        memory-mapped straight off disk and committed to device on first
+        use.  ``backend`` defaults to the artifact's recorded serve
+        backend (manifest ``extra.serve_backend``) when present.  If a
+        kernel backend is requested but the artifact was compiled without
+        its operands, they are packed once here at boot — inside the
+        jitted programs the codes are traced and ``sme_apply`` would
+        silently fall back to xla instead.
+        """
+        from repro.compiler.artifact import load_artifact
+        from repro.core.backend import ensure_operands
+        params, plan, manifest = load_artifact(path, verify=verify)
+        kw.setdefault("backend",
+                      manifest.get("extra", {}).get("serve_backend"))
+        if kw.get("backend") in ("v1", "v2"):
+            params = ensure_operands(params, kw["backend"])
+        eng = cls(api, params, **kw)
+        eng.plan = plan
+        return eng
 
     def _backend_scope(self):
         """SME backend context for jitted model calls (trace-time capture:

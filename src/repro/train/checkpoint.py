@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing: atomic, async, elastic-reshardable.
 
-Large-scale posture (DESIGN.md §5):
+Large-scale posture:
 
 * **atomic** — write to ``step_XXXX.tmp/`` then ``rename``; a crash mid-save
   never corrupts the latest checkpoint; a manifest records tree structure;

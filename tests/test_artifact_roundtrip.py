@@ -1,0 +1,73 @@
+"""Persistence round trips of packed SME params: ``train.checkpoint``
+save/restore must be bit-identical for a converted (uint8 codes +
+metadata + kernel operands) tree, and a ``.smez`` artifact must reproduce
+the in-memory ``convert_params_to_sme`` logits exactly."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import compile_model, load_artifact, plan_model
+from repro.core.integrate import convert_params_to_sme
+from repro.train.checkpoint import restore, save
+
+RNG = np.random.default_rng(3)
+
+
+def _leaves(tree):
+    return sorted(jax.tree_util.tree_leaves_with_path(tree),
+                  key=lambda t: str(t[0]))
+
+
+def _assert_trees_bit_identical(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for (pa, xa), (pb, xb) in zip(la, lb):
+        assert str(pa) == str(pb)
+        xa, xb = np.asarray(xa), np.asarray(xb)
+        assert xa.dtype == xb.dtype, pa
+        assert np.array_equal(xa, xb), pa
+
+
+def test_checkpoint_round_trip_of_packed_sme_tree(tmp_path):
+    tree = {
+        "blk": {"mlp": {"wi": RNG.normal(0, 0.05, (256, 384)),
+                        "wo": RNG.normal(0, 0.05, (384, 256))}},
+        "moe": {"wi": RNG.normal(0, 0.05, (2, 256, 256))},
+        "norm": {"w": np.ones(256, np.float32)},
+    }
+    # emit kernel operands + a reordered layer so every payload kind
+    # (u8 codes, packed signs, i32 CSC index arrays, perm, scalar meta)
+    # goes through the npz round trip
+    plan = plan_model(tree, error_budget=0.06, backend="auto")
+    packed = jax.tree.map(np.asarray,
+                          convert_params_to_sme(tree, plan=plan))
+    save(tmp_path / "ckpt", 0, packed)
+    restored = restore(tmp_path / "ckpt", 0, packed)
+    _assert_trees_bit_identical(packed, restored)
+
+
+def test_smez_load_reproduces_inline_logits_exactly():
+    import tempfile
+
+    from repro.configs import ARCHS, scale_down
+    from repro.models import build_model
+
+    cfg = scale_down(ARCHS["qwen2-0.5b"], d_model=256, d_ff=512,
+                     head_dim=64, n_heads=4, n_kv_heads=2, vocab=512)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+    plan = plan_model(params, error_budget=0.06, backend=None)
+    assert plan.layers
+
+    inline = convert_params_to_sme(params, plan=plan)
+    with tempfile.TemporaryDirectory() as tmp:
+        _, _ = compile_model(params, plan=plan, out=tmp + "/m.smez")
+        loaded, plan2, _ = load_artifact(tmp + "/m.smez")
+        _assert_trees_bit_identical(jax.tree.map(np.asarray, inline), loaded)
+
+        batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 12),
+                                              0, cfg.vocab)}
+        prefill = jax.jit(lambda p, b: api.prefill(p, b, s_max=16)[0])
+        y_inline = np.asarray(prefill(inline, batch))
+        y_art = np.asarray(prefill(jax.tree.map(jnp.asarray, loaded), batch))
+        assert np.array_equal(y_inline, y_art)

@@ -1,0 +1,269 @@
+"""Offline compiler: planner budget behavior, tile-densifying reordering,
+``.smez`` artifact round trips, and the compile -> serve end-to-end path."""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.compiler import (
+    CompilePlan, compile_model, load_artifact, permutation_from_codes,
+    permutation_gain, plan_model, read_manifest, save_artifact,
+    verify_artifact,
+)
+from repro.core.integrate import convert_params_to_sme, pack_sme_param
+from repro.core.backend import sme_apply
+from repro.core.quant import quantize
+from repro.core.sme import sme_compress, sme_matmul_ref_np
+
+RNG = np.random.default_rng(7)
+
+
+def structured_sparse(k=512, n=512, seed=7):
+    """Rows alternate between two disjoint column supports — every tile is
+    occupied as laid out, half empty once rows are clustered."""
+    rng = np.random.default_rng(seed)
+    w = np.zeros((k, n))
+    vals = rng.normal(0, 0.05, (k, n))
+    w[0::2, : n // 2] = vals[0::2, : n // 2]
+    w[1::2, n // 2:] = vals[1::2, n // 2:]
+    return w
+
+
+def small_tree(seed=0, shapes=((256, 256), (256, 384))):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": {"w": rng.normal(0, 0.05, s)}
+            for i, s in enumerate(shapes)}
+
+
+def _any2d(path, leaf):
+    return leaf.ndim == 2
+
+
+# ------------------------------------------------------------------ planner
+def test_plan_respects_budget_and_is_monotone():
+    tree = small_tree()
+    # budget 0 blocks every upgrade: the most-accurate floor of the grid
+    floor = plan_model(tree, error_budget=0.0, reorder=False).weighted_error()
+    plans = [plan_model(tree, error_budget=b, reorder=False)
+             for b in (0.01, 0.06, 0.2)]
+    for plan, budget in zip(plans, (0.01, 0.06, 0.2)):
+        # budget gates upgrades: weighted error never exceeds
+        # max(budget, most-accurate floor)
+        assert plan.weighted_error() <= max(budget, floor + 1e-9)
+    # larger budget -> no more bytes
+    assert plans[0].total_bytes() >= plans[1].total_bytes() \
+        >= plans[2].total_bytes()
+
+
+def test_plan_covers_eligible_layers_and_stacked():
+    tree = {"mlp": {"wi": RNG.normal(0, 0.05, (256, 256))},
+            "moe": {"wi": RNG.normal(0, 0.05, (3, 256, 256))},
+            "tiny": {"w": RNG.normal(0, 0.05, (64, 64))},
+            "bias": {"b": RNG.normal(0, 0.05, (256,))}}
+    plan = plan_model(tree, error_budget=0.06)
+    assert set(plan.layers) == {"mlp/wi", "moe/wi"}
+    assert plan.layers["moe/wi"].n_slices == 3
+    assert not plan.layers["moe/wi"].reorder     # stacked: never reordered
+    assert plan.layers["mlp/wi"].n_weights == 256 * 256
+
+
+def test_plan_json_round_trip_and_version_gate():
+    plan = plan_model(small_tree(), error_budget=0.06)
+    plan2 = CompilePlan.from_json(plan.to_json())
+    assert plan2.to_json() == plan.to_json()
+    assert plan2.for_path(["l0", "w"]).shape == (256, 256)
+    bumped = json.loads(plan.to_json())
+    bumped["version"] = 999
+    with pytest.raises(ValueError, match="newer"):
+        CompilePlan.from_json(json.dumps(bumped))
+
+
+def test_plan_analytic_measure_runs_without_data():
+    shaped = {"l": {"w": jax.ShapeDtypeStruct((512, 512), jnp.float32)}}
+    plan = plan_model(shaped, error_budget=0.06, measure="analytic")
+    lp = plan.layers["l/w"]
+    assert lp.total_tiles == 16 and lp.bytes_per_weight > 0
+
+
+# ------------------------------------------------------------------ reorder
+def test_reorder_strictly_reduces_csc_entries():
+    w = structured_sparse()
+    q = quantize(w, "sme", 8, 3)
+    before, after = permutation_gain(q.codes)
+    assert after < before, (before, after)
+    assert before == 16 and after == 8    # half the tiles become empty
+    # and the packed CSC operands actually shrink
+    perm = permutation_from_codes(q.codes)
+    occ0 = int(sme_compress(w, squeeze=1).occupancy.sum())
+    occ1 = int(sme_compress(w, squeeze=1, row_perm=perm).occupancy.sum())
+    assert occ1 < occ0
+
+
+def test_reorder_permutation_is_a_permutation():
+    w = structured_sparse(k=300, n=260)    # non-multiple-of-128 shapes
+    q = quantize(w, "sme", 8, 3)
+    perm = permutation_from_codes(q.codes)
+    assert sorted(perm.tolist()) == list(range(300))
+
+
+def test_reordered_param_matches_unpermuted_oracle():
+    w = structured_sparse()
+    x = RNG.normal(0, 1, (4, 512)).astype(np.float32)
+    y_ref = sme_matmul_ref_np(x, sme_compress(w, squeeze=1))
+    q = quantize(w, "sme", 8, 3)
+    perm = permutation_from_codes(q.codes)
+    # v2 matters most: auto plans pick it, so reordered weights serve
+    # through the minifloat-6 kernel in the default compile->serve path
+    for emit, backend in ((None, "xla"), ("v1", "v1"), ("v2", "v2")):
+        param = {k: jnp.asarray(v)
+                 for k, v in pack_sme_param(w, squeeze=1, backend=emit,
+                                            row_perm=perm).items()}
+        y = np.asarray(sme_apply(jnp.asarray(x), param, backend),
+                       np.float64)
+        rel = np.abs(y - y_ref).max() / np.abs(y_ref).max()
+        assert rel < 5e-5, (backend, rel)
+
+
+def test_dequant_restores_row_order_for_reordered_param():
+    # direct dequant consumers (lm_head tying, xla backend) must see the
+    # ORIGINAL row order; only kernel operands keep the permuted layout
+    from repro.core.integrate import sme_dequant_jnp
+    w = structured_sparse()
+    q = quantize(w, "sme", 8, 3)
+    perm = permutation_from_codes(q.codes)
+    p = {k: jnp.asarray(v)
+         for k, v in pack_sme_param(w, squeeze=1, row_perm=perm).items()}
+    wd = np.asarray(sme_dequant_jnp(p, dtype=jnp.float32), np.float64)
+    w_ref = sme_compress(w, squeeze=1).dequant()
+    rel = np.abs(wd - w_ref).max() / np.abs(w_ref).max()
+    assert rel < 1e-5, rel
+
+
+def test_compile_model_packs_exactly_the_planned_layers(tmp_path):
+    tree = {"keep": {"w": RNG.normal(0, 0.05, (256, 256))},
+            "skip": {"w": RNG.normal(0, 0.05, (256, 256))}}
+    packed, plan = compile_model(
+        tree, out=tmp_path / "p.smez", backend=None,
+        predicate=lambda path, leaf: "skip" not in path and leaf.ndim == 2)
+    assert set(plan.layers) == {"keep/w"}
+    assert "sme_codes" in packed["keep"]["w"]
+    # the excluded layer must come through dense, not silently packed
+    assert not isinstance(packed["skip"]["w"], dict)
+
+
+def test_plan_marks_reorder_only_when_it_frees_tiles():
+    tree = {"structured": {"w": structured_sparse()},
+            "dense": {"w": RNG.normal(0, 0.05, (256, 256))}}
+    plan = plan_model(tree, error_budget=0.06, predicate=_any2d)
+    assert plan.layers["structured/w"].reorder
+    assert not plan.layers["dense/w"].reorder
+    lp = plan.layers["structured/w"]
+    assert lp.occupied_tiles_reordered < lp.occupied_tiles
+    packed = convert_params_to_sme(tree, plan=plan, predicate=_any2d)
+    assert "sme_perm" in packed["structured"]["w"]
+    assert "sme_perm" not in packed["dense"]["w"]
+
+
+# ----------------------------------------------------------------- artifact
+def test_artifact_round_trip_bit_identical(tmp_path):
+    tree = small_tree()
+    plan = plan_model(tree, error_budget=0.06)
+    packed = convert_params_to_sme(tree, plan=plan)
+    packed_np = jax.tree.map(np.asarray, packed)
+    path = save_artifact(tmp_path / "m.smez", packed_np, plan,
+                         extra={"note": "test"})
+    loaded, plan2, manifest = load_artifact(path)
+    assert manifest["extra"]["note"] == "test"
+    assert plan2.to_json() == plan.to_json()
+    flat1 = jax.tree_util.tree_leaves_with_path(packed_np)
+    flat2 = jax.tree_util.tree_leaves_with_path(loaded)
+    assert len(flat1) == len(flat2)
+    for (p1, a1), (p2, a2) in zip(sorted(flat1, key=lambda t: str(t[0])),
+                                  sorted(flat2, key=lambda t: str(t[0]))):
+        assert str(p1) == str(p2)
+        assert a1.dtype == a2.dtype
+        assert np.array_equal(np.asarray(a1), np.asarray(a2)), p1
+    assert verify_artifact(path) == len(manifest["arrays"])
+
+
+def test_artifact_preserves_list_tuple_structure(tmp_path):
+    tree = {"stack": [{"w": np.arange(6.0).reshape(2, 3)},
+                      {"w": np.ones((2, 2), np.uint8)}],
+            "pair": (np.zeros(3, np.int32), np.full(2, 7.0))}
+    path = save_artifact(tmp_path / "t.smez", tree)
+    loaded, plan, _ = load_artifact(path)
+    assert plan is None
+    assert isinstance(loaded["stack"], list)
+    assert isinstance(loaded["pair"], tuple)
+    assert np.array_equal(loaded["stack"][0]["w"], tree["stack"][0]["w"])
+    assert loaded["stack"][1]["w"].dtype == np.uint8
+
+
+def test_artifact_version_and_corruption_gates(tmp_path):
+    path = save_artifact(tmp_path / "v.smez", {"w": np.arange(4.0)})
+    man = json.loads((path / "manifest.json").read_text())
+    # newer format refused
+    man2 = dict(man, format_version=999)
+    (path / "manifest.json").write_text(json.dumps(man2))
+    with pytest.raises(ValueError, match="newer"):
+        read_manifest(path)
+    (path / "manifest.json").write_text(json.dumps(man))
+    # corrupt payload: lazy load fine, verify raises
+    fname = next(iter(man["arrays"].values()))["file"]
+    payload = path / "payload" / fname
+    raw = bytearray(payload.read_bytes())
+    raw[-1] ^= 0xFF
+    payload.write_bytes(bytes(raw))
+    load_artifact(path)                     # lazy: no verification
+    with pytest.raises(ValueError, match="sha256"):
+        load_artifact(path, verify=True)
+
+
+# -------------------------------------------------------------- end to end
+def test_compile_then_serve_matches_inline(tmp_path):
+    from repro.configs import ARCHS, scale_down
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = scale_down(ARCHS["qwen1.5-0.5b"], d_model=256, d_ff=512,
+                     head_dim=64, n_heads=4, n_kv_heads=2, vocab=512)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+
+    plan = plan_model(params, error_budget=0.06, backend=None)
+    assert plan.layers, "smoke config must have eligible layers"
+    packed, plan_out = compile_model(params, plan=plan,
+                                     out=tmp_path / "m.smez")
+
+    def run(engine):
+        reqs = [Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                        max_new_tokens=4) for i in range(2)]
+        stats = engine.run(reqs, max_steps=40)
+        assert stats["completed"] == 2
+        return [r.out_tokens for r in reqs]
+
+    inline = ServeEngine(api, convert_params_to_sme(params, plan=plan),
+                         slots=2, s_max=48)
+    art = ServeEngine.from_artifact(api, tmp_path / "m.smez",
+                                    slots=2, s_max=48)
+    assert art.plan is not None and len(art.plan.layers) == len(plan.layers)
+    assert run(inline) == run(art)
+
+    # explicit kernel backend on an operand-less artifact must pack at
+    # boot (inside jit the traced codes would silently fall back to xla)
+    kern = ServeEngine.from_artifact(api, tmp_path / "m.smez",
+                                     slots=2, s_max=48, backend="v1")
+
+    def packed_weights(tree, found):
+        if isinstance(tree, dict):
+            if "sme_codes" in tree:
+                found.append(tree)
+            else:
+                for v in tree.values():
+                    packed_weights(v, found)
+        return found
+
+    weights = packed_weights(kern.params, [])
+    assert weights and all("sme_v1_codes" in w for w in weights)
