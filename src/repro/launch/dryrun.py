@@ -205,17 +205,20 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = "base"):
     specs = api.input_specs(shape)
     bs = batch_sharding(mesh, specs)
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    apos = jax.ShapeDtypeStruct((), jnp.int32)
+    # vectorized decode contract: per-row positions + active mask (the
+    # serving engine issues one such call per step for a ragged batch)
+    apos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    aact = jax.ShapeDtypeStruct((b,), jnp.bool_)
     logits_sh = _logits_sharding(mesh, shape, cfg)
 
-    def serve_step(params, token, caches, pos):
-        return api.decode_step(params, token, caches, pos)
+    def serve_step(params, token, caches, pos, active):
+        return api.decode_step(params, token, caches, pos, active)
 
     fn = jax.jit(serve_step,
-                 in_shardings=(ps, bs["token"], cs, rep),
+                 in_shardings=(ps, bs["token"], cs, rep, rep),
                  out_shardings=(logits_sh, cs),
                  donate_argnums=(2,))
-    args = (aparams, specs["token"], acache, apos)
+    args = (aparams, specs["token"], acache, apos, aact)
     meta["tokens"] = shape.global_batch  # one new token per sequence
     meta["cache_bytes_dev"] = _tree_bytes(acache, cs, mesh)
     meta["arg_bytes_per_dev"] = (

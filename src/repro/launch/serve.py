@@ -2,6 +2,12 @@
 SME-compressed weights — converted inline, or booted from a compiled
 ``.smez`` artifact with zero per-boot packing (DESIGN.md §4).
 
+Prompts are deliberately ragged (lengths ``5 + i % 4``): the engine decodes
+all slots with one vectorized call per step — per-slot ``pos`` and an
+``active`` mask — so mixed sequence lengths cost no extra decode calls and
+cannot cross-corrupt slot caches (DESIGN.md §6).  CI runs this as a smoke
+step with ``--sme --backend v1``.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 6 --max-new 12 [--sme] [--squeeze 1]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \

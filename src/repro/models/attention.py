@@ -10,6 +10,10 @@ Design notes (large-scale posture):
 * decode uses fixed-size KV caches; windowed layers keep a **ring buffer**
   of ``window`` entries whose positions are derived (slot j at step t holds
   position p = largest p <= t with p % W == j), so no position array is stored;
+* decode positions are **per batch row**: ``pos`` is a ``[B]`` int32 vector
+  (a scalar broadcasts) and ``active`` a ``[B]`` bool mask — each row writes
+  its own ring/linear cache slot and inactive rows never write at all, so a
+  ragged serving batch cannot clobber another slot's cache (DESIGN.md §6);
 * MLA caches the **compressed** c_kv/k_pe (paper-faithful memory win) and
   decodes in the absorbed form (q folded through W_uk, output through W_uv).
 """
@@ -23,7 +27,9 @@ import jax.numpy as jnp
 
 from repro.parallel.policy import constrain
 
-from .common import Initializer, apply_rope, linear, linear_init
+from .common import (
+    Initializer, apply_rope, linear, linear_init, norm_pos_active,
+)
 
 __all__ = [
     "gqa_init", "gqa_prefill", "gqa_decode",
@@ -154,20 +160,31 @@ def blockwise_attention(
 
 
 def _decode_attend(q, k, v, kpos, pos, window, scale):
-    """Single-step attention. q:[B,1,H,hd]; k/v:[B,W,KV,hd]; kpos:[B?,W]."""
+    """Single-step attention. q:[B,1,H,hd]; k/v:[B,W,KV,hd]; kpos:[B?,W];
+    pos:[B] (per-row query position)."""
     b, _, h, hd = q.shape
     kvh = k.shape[2]
     g = h // kvh
     qh = q.reshape(b, kvh, g, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    valid = (kpos >= 0) & (kpos <= pos)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
     if window:
-        valid &= pos - kpos < window
+        valid &= pos[:, None] - kpos < window
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _masked_row_scatter(cache, new, slot, active):
+    """cache:[B,W,...] <- new:[B,...] at per-row ``slot`` [B], only where
+    ``active`` [B]; inactive rows keep their cache bytes untouched."""
+    rows = jnp.arange(cache.shape[0])
+    keep = cache[rows, slot]
+    upd = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return cache.at[rows, slot].set(
+        jnp.where(upd, new.astype(cache.dtype), keep))
 
 
 # ---------------------------------------------------------------------------
@@ -235,19 +252,20 @@ def gqa_prefill(p, x, cfg, window: int = 0, causal: bool = True,
     return y, cache
 
 
-def gqa_decode(p, x, cache, pos, cfg, window: int = 0):
-    """One-step decode. x:[B,1,D]; cache k/v:[B,W,KV,hd]; pos: scalar i32."""
+def gqa_decode(p, x, cache, pos, cfg, window: int = 0, active=None):
+    """One-step decode. x:[B,1,D]; cache k/v:[B,W,KV,hd]; pos:[B] i32
+    per-row next position (a scalar broadcasts); active:[B] bool — only
+    active rows write their ring slot (None = all)."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos)
-    q, k, v = _qkv(p, x, cfg, positions)
+    pos, active = norm_pos_active(pos, active, b)
+    q, k, v = _qkv(p, x, cfg, pos[:, None])
     w = cache["k"].shape[1]
     slot = pos % w
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-    # slot j holds position p = pos - ((pos - j) mod W)
+    kc = _masked_row_scatter(cache["k"], k[:, 0], slot, active)
+    vc = _masked_row_scatter(cache["v"], v[:, 0], slot, active)
+    # per row, slot j holds position p = pos - ((pos - j) mod W)
     j = jnp.arange(w)
-    kpos = pos - ((pos - j) % w)
-    kpos = jnp.broadcast_to(kpos[None], (b, w))
+    kpos = pos[:, None] - ((pos[:, None] - j[None]) % w)
     y = _decode_attend(q, kc, vc, kpos, pos, window, 1.0 / (cfg.hd ** 0.5))
     y = linear(y.reshape(b, 1, -1), p["o"])
     return y, {"k": kc, "v": vc}
@@ -317,17 +335,19 @@ def mla_prefill(p, x, cfg, cache_len: int = 0, block_q: int = 512,
     return y, cache
 
 
-def mla_decode(p, x, cache, pos, cfg):
-    """Absorbed-form decode over the compressed cache."""
+def mla_decode(p, x, cache, pos, cfg, active=None):
+    """Absorbed-form decode over the compressed cache. pos:[B] i32 per-row
+    next position (a scalar broadcasts); active:[B] bool write mask."""
     b = x.shape[0]
     h, dn, dr, dv = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    positions = jnp.full((b, 1), pos)
+    pos, active = norm_pos_active(pos, active, b)
+    positions = pos[:, None]
     q_nope, q_pe = _mla_q(p, x, cfg, positions)         # [B,1,H,dn],[B,1,H,dr]
     ckv = linear(x, p["kv_down"])
     c_t, k_pe_raw = ckv[..., :cfg.kv_lora], ckv[..., cfg.kv_lora:]
     k_pe_t = apply_rope(k_pe_raw[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
-    cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_t, pos, axis=1)
-    pc = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe_t, pos, axis=1)
+    cc = _masked_row_scatter(cache["c"], c_t[:, 0], pos, active)
+    pc = _masked_row_scatter(cache["k_pe"], k_pe_t[:, 0], pos, active)
     w_up = p["kv_up"]["w"].reshape(cfg.kv_lora, h, dn + dv)
     w_uk, w_uv = w_up[..., :dn], w_up[..., dn:]
     q_c = jnp.einsum("bthn,khn->bthk", q_nope.astype(jnp.float32),
@@ -338,7 +358,7 @@ def mla_decode(p, x, cache, pos, cfg):
     scale = 1.0 / ((dn + dr) ** 0.5)
     s = (s_c + s_pe) * scale
     kpos = jnp.arange(cc.shape[1])[None]
-    s = jnp.where((kpos <= pos)[:, None, :], s, NEG_INF)
+    s = jnp.where((kpos <= pos[:, None])[:, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhs,bsk->bhk", prob, cc.astype(jnp.float32))
     y = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
@@ -380,6 +400,6 @@ def cross_decode(p, x, kv, cfg):
     q = linear(x, p["q"]).reshape(b, 1, cfg.n_heads, cfg.hd)
     t = kv["k"].shape[1]
     kpos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
-    y = _decode_attend(q, kv["k"], kv["v"], kpos, jnp.int32(t), 0,
-                       1.0 / (cfg.hd ** 0.5))
+    y = _decode_attend(q, kv["k"], kv["v"], kpos, jnp.full((b,), t, jnp.int32),
+                       0, 1.0 / (cfg.hd ** 0.5))
     return linear(y.reshape(b, 1, -1), p["o"])

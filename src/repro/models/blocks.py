@@ -95,20 +95,26 @@ def block_prefill(p, x, cfg, kind: str, use_moe: bool, cache_len: int,
     return _mlp_half(p, x, cfg, use_moe), cache
 
 
-def block_decode(p, x, cache, pos, cfg, kind: str, use_moe: bool):
+def block_decode(p, x, cache, pos, cfg, kind: str, use_moe: bool,
+                 active=None):
+    """One-token decode. ``pos``:[B] i32 per-row next position (a scalar
+    broadcasts); ``active``:[B] bool — inactive rows never write their
+    cache/state region (vectorized decode contract, DESIGN.md §6)."""
     h = apply_norm(x, p["norm1"], cfg.norm)
     if kind in ATTN_KINDS:
         if cfg.attn_type == "mla":
-            y, cache = att.mla_decode(p["mix"], h, cache, pos, cfg)
+            y, cache = att.mla_decode(p["mix"], h, cache, pos, cfg,
+                                      active=active)
         else:
             y, cache = att.gqa_decode(p["mix"], h, cache, pos, cfg,
-                                      window=_window(cfg, kind))
+                                      window=_window(cfg, kind),
+                                      active=active)
     elif kind == "mamba":
-        y, cache = ssm.mamba_decode(p["mix"], h, cache, cfg)
+        y, cache = ssm.mamba_decode(p["mix"], h, cache, cfg, active=active)
     elif kind == "mlstm":
-        y, cache = ssm.mlstm_decode(p["mix"], h, cache, cfg)
+        y, cache = ssm.mlstm_decode(p["mix"], h, cache, cfg, active=active)
     else:
-        y, cache = ssm.slstm_decode(p["mix"], h, cache, cfg)
+        y, cache = ssm.slstm_decode(p["mix"], h, cache, cfg, active=active)
     x = x + y
     return _mlp_half(p, x, cfg, use_moe), cache
 

@@ -10,7 +10,19 @@ import numpy as np
 __all__ = [
     "Initializer", "rmsnorm", "layernorm", "linear", "mlp_init", "mlp_apply",
     "rope_freqs", "apply_rope", "norm_init", "embed_init", "sinusoidal_pos",
+    "norm_pos_active",
 ]
+
+
+def norm_pos_active(pos, active, b: int):
+    """Normalize the vectorized decode-contract inputs (DESIGN.md §6):
+    ``pos`` broadcasts to a [B] int32 per-row position vector, ``active``
+    defaults to all-true [B] bool.  Idempotent — safe to call at every
+    layer of the decode stack."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    return pos, jnp.broadcast_to(jnp.asarray(active, bool), (b,))
 
 
 class Initializer:

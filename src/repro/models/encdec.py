@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from .common import (
     Initializer, apply_norm, embed_init, mlp_apply, mlp_init, norm_init,
-    sinusoidal_pos,
+    norm_pos_active, sinusoidal_pos,
 )
 from . import attention as att
 from .transformer import chunked_ce_loss
@@ -155,17 +155,23 @@ def encdec_prefill(params, batch, cfg, s_max: int, block_q=512, block_k=512):
     return logits, caches
 
 
-def encdec_decode_step(params, token, caches, pos, cfg):
+def encdec_decode_step(params, token, caches, pos, cfg, active=None):
+    """token:[B,1]; pos:[B] i32 per-row decoder position (a scalar
+    broadcasts); active:[B] bool self-attn cache write mask (None = all)."""
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos, active = norm_pos_active(pos, active, token.shape[0])
     x = params["embed"]["w"].astype(dt)[token]
     d = cfg.d_model
-    pos_table = sinusoidal_pos(caches["self"]["k"].shape[2], d).astype(dt)
-    x = x + jax.lax.dynamic_slice_in_dim(pos_table, pos, 1, 0)[None]
+    s_max = caches["self"]["k"].shape[2]
+    pos_table = sinusoidal_pos(s_max, d).astype(dt)
+    # per-row sinusoidal gather (ragged batches sit at different positions)
+    x = x + jnp.take(pos_table, jnp.clip(pos, 0, s_max - 1), axis=0)[:, None]
 
     def body(h, xs):
         p, cache = xs
         a = apply_norm(h, p["norm1"], cfg.norm)
-        y, self_c = att.gqa_decode(p["self"], a, cache["self"], pos, cfg)
+        y, self_c = att.gqa_decode(p["self"], a, cache["self"], pos, cfg,
+                                   active=active)
         h = h + y
         c = apply_norm(h, p["norm2"], cfg.norm)
         h = h + att.cross_decode(p["cross"], c, cache["cross"], cfg)

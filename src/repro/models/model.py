@@ -6,7 +6,11 @@ dry-run, trainer and serving engine are architecture-agnostic:
   * ``init_params(rng)``                    (use jax.eval_shape for dry-run)
   * ``train_loss(params, batch)``           scalar loss
   * ``prefill(params, batch)``              -> (last logits, caches)
-  * ``decode_step(params, token, caches, pos)`` -> (logits, caches)
+  * ``decode_step(params, token, caches, pos, active=None)``
+    -> (logits, caches); ``pos`` is a per-row ``[B]`` int32 position
+    vector (a scalar broadcasts) and ``active`` a ``[B]`` bool mask —
+    inactive rows never write their cache region, so one jitted call
+    serves a ragged continuous batch (DESIGN.md §6)
   * ``input_specs(shape_cfg)``              ShapeDtypeStruct stand-ins
 """
 from __future__ import annotations
@@ -76,8 +80,9 @@ def _build_lm(cfg, shape, bq):
         s_max = s_max or batch["tokens"].shape[1]
         return tf.lm_prefill(params, batch, cfg, s_max, **bq)
 
-    def decode_step(params, token, caches, pos):
-        return tf.lm_decode_step(params, token, caches, pos, cfg)
+    def decode_step(params, token, caches, pos, active=None):
+        return tf.lm_decode_step(params, token, caches, pos, cfg,
+                                 active=active)
 
     def input_specs(sh: ShapeConfig) -> Dict[str, Any]:
         b, s = sh.global_batch, sh.seq_len
@@ -124,8 +129,9 @@ def _build_encdec(cfg, shape, bq):
         s_max = s_max or batch["tokens"].shape[1]
         return ed.encdec_prefill(params, batch, cfg, s_max, **bq)
 
-    def decode_step(params, token, caches, pos):
-        return ed.encdec_decode_step(params, token, caches, pos, cfg)
+    def decode_step(params, token, caches, pos, active=None):
+        return ed.encdec_decode_step(params, token, caches, pos, cfg,
+                                     active=active)
 
     def input_specs(sh: ShapeConfig) -> Dict[str, Any]:
         b, s = sh.global_batch, sh.seq_len

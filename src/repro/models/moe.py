@@ -11,6 +11,12 @@ compiles deterministically and shards as:
 
 Overflowing tokens (> capacity) are dropped (standard GShard semantics);
 their combine weight is zeroed so the residual path carries them.
+
+Routing is strictly per batch row, so the layer is unchanged under the
+vectorized decode contract (per-row ``pos``/``active``, DESIGN.md §6):
+decode (s == 1) stays the vmapped group path, and SME-packed expert
+weights keep dispatching stacked [E, D, F] ``sme_apply`` calls — the
+ragged-serving property test re-verifies both backends row-for-row.
 """
 from __future__ import annotations
 

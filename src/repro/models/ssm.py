@@ -28,6 +28,20 @@ __all__ = [
 ]
 
 
+def _mask_state(active, new, old):
+    """Per-row state freeze for the vectorized decode contract: rows with
+    ``active[i] == False`` keep their previous recurrent state bit-for-bit
+    (free serving slots must not drift between a leave and the next join)."""
+    if active is None:
+        return new
+
+    def sel(n, o):
+        a = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
 # ---------------------------------------------------------------------------
 # causal depthwise conv (width w) used by mamba
 # ---------------------------------------------------------------------------
@@ -136,15 +150,15 @@ def mamba_apply(p, x, cfg, want_state: bool = False):
     return y, state
 
 
-def mamba_decode(p, x1, state, cfg):
-    """x1:[B,1,D] one step."""
+def mamba_decode(p, x1, state, cfg, active=None):
+    """x1:[B,1,D] one step; ``active``:[B] bool freezes inactive rows' state."""
     d_in, dt_rank, n = _mamba_dims(cfg)
     xz = linear(x1, p["in_proj"])
     xr, z = jnp.split(xz, 2, axis=-1)
     xc, conv_state = _causal_conv_step(xr, state["conv"], p["conv_w"], p["conv_b"])
     y, h = _mamba_core(p, xc, z, cfg, state["h"])
     y = linear(y, p["out_proj"])
-    return y, {"conv": conv_state, "h": h}
+    return y, _mask_state(active, {"conv": conv_state, "h": h}, state)
 
 
 # ---------------------------------------------------------------------------
@@ -267,8 +281,9 @@ def mlstm_apply(p, x, cfg, want_state: bool = False, chunk: int = 1024):
     return y, (state if want_state else None)
 
 
-def mlstm_decode(p, x1, state, cfg):
-    """Recurrent single step (exact mLSTM recurrence)."""
+def mlstm_decode(p, x1, state, cfg, active=None):
+    """Recurrent single step (exact mLSTM recurrence); ``active``:[B] bool
+    freezes inactive rows' state."""
     d_in, nh, dh = _mlstm_dims(cfg)
     b = x1.shape[0]
     up = linear(x1, p["up"])
@@ -289,7 +304,7 @@ def mlstm_decode(p, x1, state, cfg):
     h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
     h = h.reshape(b, 1, d_in).astype(x1.dtype) * p["norm_w"].astype(x1.dtype)
     y = linear(h * jax.nn.silu(z), p["down"])
-    return y, (c_new, n_new, m_new)
+    return y, _mask_state(active, (c_new, n_new, m_new), state)
 
 
 def mlstm_state_init(cfg, batch: int):
@@ -364,10 +379,10 @@ def slstm_apply(p, x, cfg, want_state: bool = False):
     return y, (state if want_state else None)
 
 
-def slstm_decode(p, x1, state, cfg):
+def slstm_decode(p, x1, state, cfg, active=None):
     wx = linear(x1, p["wx"])
-    hs, state = _slstm_scan(p, wx, cfg, state)
+    hs, new_state = _slstm_scan(p, wx, cfg, state)
     y = hs.astype(x1.dtype)
     ff = jax.nn.silu(linear(y, {"w": p["ff_wg"]["w"]})) * linear(y, {"w": p["ff_wi"]["w"]})
     y = linear(ff, {"w": p["ff_wo"]["w"]})
-    return y, state
+    return y, _mask_state(active, new_state, state)

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.parallel.policy import constrain
 
-from .common import Initializer, apply_norm, embed_init, norm_init
+from .common import (
+    Initializer, apply_norm, embed_init, norm_init, norm_pos_active,
+)
 from .blocks import (
     block_init, block_train, block_prefill, block_decode, init_block_cache,
 )
@@ -100,7 +102,7 @@ def _embed_tokens(params, cfg, batch):
 
 
 def _run_first(params, cfg, x, mode, caches=None, pos=None,
-               cache_len: int = 0, block_q=512, block_k=512):
+               cache_len: int = 0, block_q=512, block_k=512, active=None):
     new_caches = []
     for i in range(cfg.first_dense_layers):
         p = params[f"first{i}"]
@@ -111,7 +113,8 @@ def _run_first(params, cfg, x, mode, caches=None, pos=None,
                                  block_q, block_k)
             new_caches.append(c)
         else:
-            x, c = block_decode(p, x, caches[i], pos, cfg, "attn", False)
+            x, c = block_decode(p, x, caches[i], pos, cfg, "attn", False,
+                                active=active)
             new_caches.append(c)
     return x, new_caches
 
@@ -220,12 +223,17 @@ def lm_prefill(params, batch, cfg, s_max: int,
     return logits, {"first": first_caches, "blocks": block_caches}
 
 
-def lm_decode_step(params, token, caches, pos, cfg):
-    """token:[B,1] int32; pos: scalar i32 (next position index)."""
+def lm_decode_step(params, token, caches, pos, cfg, active=None):
+    """token:[B,1] int32; pos:[B] i32 — each batch row's next position
+    index (a scalar broadcasts); active:[B] bool — rows that decode this
+    step and may write their cache region (None = all).  The scan body
+    carries the full vectors, so one jitted call serves a ragged batch."""
     kinds = _slot_kinds(cfg)
+    pos, active = norm_pos_active(pos, active, token.shape[0])
     x = _embed_tokens(params, cfg, {"tokens": token})
     x, first_caches = _run_first(params, cfg, x, "decode",
-                                 caches=caches["first"], pos=pos)
+                                 caches=caches["first"], pos=pos,
+                                 active=active)
 
     def body(h, xs):
         slot_params, slot_caches = xs
@@ -233,7 +241,7 @@ def lm_decode_step(params, token, caches, pos, cfg):
         for j, kind in enumerate(kinds):
             h, c = block_decode(slot_params[f"slot{j}"], h,
                                 slot_caches[f"slot{j}"], pos, cfg, kind,
-                                cfg.moe_for_slot(j))
+                                cfg.moe_for_slot(j), active=active)
             new[f"slot{j}"] = c
         return h, new
 

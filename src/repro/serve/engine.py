@@ -7,7 +7,14 @@ Real-system behaviors covered at small scale:
   and leaves by being marked free — no reshapes/recompiles);
 * prefill and decode are separate jitted programs (the standard
   prefill/decode split);
-* greedy or temperature sampling; per-request max_new_tokens and eos.
+* **ragged decode in one call**: ``decode_step(params, token, caches, pos,
+  active)`` takes the per-slot position vector ``pos`` ([slots] int32) and
+  the ``active`` mask ([slots] bool), so every engine step is exactly one
+  jitted decode regardless of how ragged the slots' positions are — each
+  row writes only its own cache region and free slots write nothing
+  (DESIGN.md §6);
+* per-request temperature sampling (greedy iff ``temperature == 0``),
+  per-request max_new_tokens and eos.
 
 The multi-pod serve launcher (`launch/serve.py`) wires the same engine
 through pjit with the dry-run's shardings; here it runs on whatever
@@ -23,7 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "PromptTooLong"]
+
+
+class PromptTooLong(ValueError):
+    """Prompt (plus frontend tokens) cannot fit the engine's cache ring."""
 
 
 @dataclasses.dataclass
@@ -103,6 +114,20 @@ class ServeEngine:
         return None
 
     def add_request(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot. Returns False when no slot is
+        free; raises PromptTooLong when the prompt cannot fit the cache
+        ring. A request whose prefill-sampled token already satisfies
+        eos/max_new_tokens completes immediately without taking a slot."""
+        plen = len(req.prompt) + (self.cfg.n_frontend_tokens
+                                  if self.cfg.frontend else 0)
+        if plen >= self.s_max:
+            front = (f" + {self.cfg.n_frontend_tokens} frontend tokens"
+                     if self.cfg.frontend else "")
+            raise PromptTooLong(
+                f"request {req.rid}: prefill length {plen} "
+                f"({len(req.prompt)} prompt tokens{front}) must be "
+                f"< s_max={self.s_max} — the first decoded token would "
+                f"overflow the cache ring; raise s_max or shorten the prompt")
         slot = self._free_slot()
         if slot is None:
             return False
@@ -117,14 +142,17 @@ class ServeEngine:
         with self._backend_scope():
             logits, cache1 = self._prefill(self.params, batch)
         self._stats["prefills"] += 1
-        tok = self._sample(logits)[0]
+        tok = self._sample(logits, np.array([req.temperature], np.float32))[0]
         req.out_tokens.append(int(tok))
+        # the prefill-sampled token can already satisfy the request
+        if (req.eos_id is not None and int(tok) == req.eos_id) or \
+                len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            return True
         # copy the single-sequence cache into the slot of the batched cache
         self.caches = jax.tree.map(
             lambda full, one: _slot_write(full, one, slot),
             self.caches, cache1)
-        plen = len(req.prompt) + (self.cfg.n_frontend_tokens
-                                  if self.cfg.frontend else 0)
         self.pos[slot] = plen
         self.last_token[slot, 0] = int(tok)
         self.active[slot] = req
@@ -132,63 +160,87 @@ class ServeEngine:
 
     # --------------------------------------------------------------- decode
     def step(self):
-        """One decode step for all active slots."""
-        if not any(r is not None for r in self.active):
+        """One decode step for all active slots — exactly one jitted call
+        per engine step, however ragged the slot positions are: ``pos`` is
+        the per-slot position vector and ``active`` masks free slots, whose
+        cache regions are structurally never written by the model."""
+        act = np.array([r is not None for r in self.active])
+        if not act.any():
             return
-        # single shared position: engine keeps per-slot pos; the model call
-        # uses the max (attention masks handle shorter slots via kpos<=pos
-        # with per-slot written caches).  For strictness we step per unique
-        # pos group; with equal prompt lengths this is one call.
-        pos_groups: Dict[int, List[int]] = {}
-        for i, r in enumerate(self.active):
-            if r is not None:
-                pos_groups.setdefault(int(self.pos[i]), []).append(i)
-        for pos, idxs in sorted(pos_groups.items()):
-            with self._backend_scope():
-                logits, self.caches = self._decode(
-                    self.params, jnp.asarray(self.last_token), self.caches,
-                    jnp.int32(pos))
-            self._stats["decode_steps"] += 1
-            toks = self._sample(logits)
-            for i in idxs:
-                req = self.active[i]
-                tok = int(toks[i])
-                req.out_tokens.append(tok)
-                self._stats["tokens"] += 1
-                self.pos[i] += 1
-                self.last_token[i, 0] = tok
-                if (req.eos_id is not None and tok == req.eos_id) or \
-                        len(req.out_tokens) >= req.max_new_tokens or \
-                        self.pos[i] >= self.s_max - 1:
-                    req.done = True
-                    self.active[i] = None
+        with self._backend_scope():
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(self.last_token), self.caches,
+                jnp.asarray(self.pos), jnp.asarray(act))
+        self._stats["decode_steps"] += 1
+        temps = np.array([r.temperature if r is not None else 0.0
+                          for r in self.active], np.float32)
+        toks = self._sample(logits, temps)
+        for i in np.flatnonzero(act):
+            req = self.active[i]
+            tok = int(toks[i])
+            req.out_tokens.append(tok)
+            self._stats["tokens"] += 1
+            self.pos[i] += 1
+            self.last_token[i, 0] = tok
+            # pos is the *next* write index; retire once it passes the last
+            # valid cache slot s_max-1 (matches the add_request admission
+            # bound plen < s_max)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.out_tokens) >= req.max_new_tokens or \
+                    self.pos[i] >= self.s_max:
+                req.done = True
+                self.active[i] = None
+                # park the freed row at 0 so inactive rows are in-bounds by
+                # construction, not by JAX's OOB scatter-drop semantics
+                self.pos[i] = 0
 
-    def _sample(self, logits) -> np.ndarray:
-        if logits.ndim == 2:
-            l = logits
-        else:
-            l = logits[:, -1]
+    def _sample(self, logits, temperatures) -> np.ndarray:
+        """Batched sampling: greedy where ``temperatures[i] == 0``, else a
+        softmax draw at that row's temperature (one key split per call)."""
+        l = logits if logits.ndim == 2 else logits[:, -1]
         self.key, sub = jax.random.split(self.key)
         greedy = jnp.argmax(l, axis=-1)
-        return np.asarray(greedy, dtype=np.int32)
+        temps = np.asarray(temperatures, np.float32)
+        if not np.any(temps > 0):
+            return np.asarray(greedy, dtype=np.int32)
+        t = jnp.asarray(temps)
+        sampled = jax.random.categorical(
+            sub, l.astype(jnp.float32) / jnp.maximum(t, 1e-6)[:, None],
+            axis=-1)
+        return np.asarray(jnp.where(t > 0, sampled, greedy), dtype=np.int32)
 
     def run(self, requests: List[Request], max_steps: int = 1000) -> Dict:
+        """Drive ``requests`` to completion (or ``max_steps``).  Stats split
+        ``completed`` (reached eos/max_new_tokens/cache end), ``evicted``
+        (cut off at ``max_steps`` with partial output), ``rejected``
+        (prompt cannot fit the cache — skipped, the rest of the batch keeps
+        running) and ``unserved`` (never admitted); the four always sum to
+        ``len(requests)``."""
         t0 = time.time()
         pending = list(requests)
-        done: List[Request] = []
+        n_rejected = 0
         steps = 0
         while (pending or any(self.active)) and steps < max_steps:
             while pending and self._free_slot() is not None:
-                if not self.add_request(pending[0]):
+                try:
+                    admitted = self.add_request(pending[0])
+                except PromptTooLong:
+                    pending.pop(0)
+                    n_rejected += 1
+                    continue
+                if not admitted:
                     break
                 pending.pop(0)
             self.step()
             steps += 1
-            for r in requests:
-                if r.done and r not in done:
-                    done.append(r)
+        never_ran = len([r for r in requests
+                         if not r.done and not r.out_tokens])
         return {
-            "completed": len([r for r in requests if r.done or r.out_tokens]),
+            "completed": len([r for r in requests if r.done]),
+            "evicted": len([r for r in requests
+                            if not r.done and r.out_tokens]),
+            "rejected": n_rejected,
+            "unserved": never_ran - n_rejected,
             "wall_s": time.time() - t0,
             **self._stats,
         }
@@ -198,7 +250,11 @@ def _slot_write(full, one, slot: int):
     """Write a batch-1 cache leaf into slot `slot` of the batched leaf.
 
     Handles leading stacked dims: the batch dim is the one where
-    full.shape[d] == slots and one.shape[d] == 1 (first mismatch match)."""
+    full.shape[d] == slots and one.shape[d] == 1 (first mismatch match).
+    With slots == 1 no dim mismatches — the single slot IS the whole
+    batch, so the prefill leaf replaces the batched leaf outright."""
+    if one.shape == full.shape:
+        return one.astype(full.dtype)
     for d in range(full.ndim):
         if one.shape[d] == 1 and full.shape[d] != 1:
             idx = tuple([slice(None)] * d + [slice(slot, slot + 1)])
