@@ -225,5 +225,59 @@ def bench_artifact_io() -> List[Row]:
     return rows
 
 
+def bench_shard_matrix() -> List[Row]:
+    """Mesh-serving throughput matrix: tokens/s per (data, model) mesh
+    shape through ``launch/serve`` (DESIGN.md §7).
+
+    Each cell is a subprocess so it can force its own host device count
+    (jax locks the device count on first init).  On this CPU container
+    the absolute tok/s is an interpret/emulation artifact — the decisive
+    check is that every mesh shape serves the same request batch through
+    the same jitted programs (bit-identical tokens, asserted by
+    tests/test_serve_mesh.py); the relative cell times expose the
+    collective overhead a real multi-chip host would amortize."""
+    import os
+    import re
+    import subprocess
+    import sys
+
+    rows: List[Row] = []
+    failed = []
+    for data, model in ((1, 1), (2, 2), (4, 1), (1, 4)):
+        need = data * model
+        cmd = [sys.executable, "-m", "repro.launch.serve",
+               "--arch", "qwen1.5-0.5b", "--d-model", "128", "--d-ff", "256",
+               "--vocab", "256", "--requests", "4", "--max-new", "6",
+               "--slots", "2", "--s-max", "64", "--sme", "--backend", "v1",
+               "--mesh", f"{data},{model}", "--host-devices", str(need)]
+        env = {**os.environ,
+               "PYTHONPATH": os.environ.get("PYTHONPATH", "src")}
+        env.pop("XLA_FLAGS", None)          # --host-devices sets it
+        t0 = time.perf_counter()
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=900)
+        wall = time.perf_counter() - t0
+        name = f"shard_matrix/mesh_{data}x{model}"
+        if r.returncode != 0:
+            tail = (r.stderr.strip().splitlines() or ["(no stderr)"])[-1]
+            failed.append(f"{data}x{model}: {tail[:200]}")
+            continue
+        m = re.search(r"throughput: ([0-9.]+) tok/s", r.stdout)
+        toks = re.search(r"'tokens': (\d+)", r.stdout)
+        rows.append((name + "/tok_s",
+                     float(m.group(1)) if m else float("nan"),
+                     f"{need} host devices, sme v1 interpret, "
+                     f"{toks.group(1) if toks else '?'} tokens"))
+        rows.append((name + "/wall_s", round(wall, 1),
+                     "subprocess incl. jax init + compile"))
+    if failed:
+        # raise instead of emitting NaN rows so benchmarks/run.py counts
+        # the suite as failed and CI goes red with the real error
+        raise RuntimeError(
+            f"{len(failed)} shard-matrix cells failed: " + "; ".join(failed))
+    return rows
+
+
 ALL = [bench_sme_spmm_numerics, bench_decode_bandwidth_model,
-       bench_dense_vs_sme_xla, bench_backend_matrix, bench_artifact_io]
+       bench_dense_vs_sme_xla, bench_backend_matrix, bench_artifact_io,
+       bench_shard_matrix]

@@ -14,6 +14,14 @@ def main() -> None:
     from benchmarks import paper_tables, kernel_bench, roofline
 
     suites = paper_tables.ALL + kernel_bench.ALL + roofline.ALL
+    only = [a for a in sys.argv[1:] if not a.startswith("-")]
+    if only:
+        # substring filter on function names: `run.py shard_matrix` runs
+        # just bench_shard_matrix (CI publishes it as a job artifact)
+        suites = [f for f in suites if any(o in f.__name__ for o in only)]
+        if not suites:
+            print(f"no benchmark matches {only}", file=sys.stderr)
+            sys.exit(2)
     print("name,value,derived")
     failures = 0
     for fn in suites:

@@ -139,13 +139,21 @@ def read_manifest(path) -> Dict:
     return manifest
 
 
-def load_artifact(path, mmap: bool = True, verify: bool = False):
+def load_artifact(path, mmap: bool = True, verify: bool = False,
+                  place=None):
     """Load a ``.smez`` artifact -> (params, plan | None, manifest).
 
     Leaves come back as numpy arrays — memory-mapped when ``mmap`` (the
     zero-copy path: CSC operands page in on first touch) — in the exact
     tree structure ``save_artifact`` saw, so they drop into ``ServeEngine``
     / ``sme_apply`` in place of an inline ``convert_params_to_sme`` tree.
+
+    ``place(key, arr) -> arr`` is applied per leaf as it is loaded
+    (``key`` is the '/'-joined tree path).  Mesh-native serving passes a
+    placer that ``jax.device_put``s each leaf straight into its computed
+    ``NamedSharding`` (``parallel.sharding.leaf_sharding``): the mmap view
+    is sliced per device shard and the full host-replicated param tree is
+    never materialized (DESIGN.md §7).
     """
     path = pathlib.Path(path)
     manifest = read_manifest(path)
@@ -163,7 +171,7 @@ def load_artifact(path, mmap: bool = True, verify: bool = False):
             if digest != info["sha256"]:
                 raise ValueError(f"artifact leaf {key}: sha256 mismatch "
                                  f"(corrupt payload {info['file']})")
-        flat[key] = arr
+        flat[key] = place(key, arr) if place is not None else arr
     params = _unflatten_tree(manifest["tree"], flat)
     plan = (CompilePlan.from_json(json.dumps(manifest["plan"]))
             if manifest.get("plan") else None)

@@ -259,33 +259,43 @@ def operand_keys(backend_name: str) -> Tuple[str, ...]:
     return tuple(be.key(op) for op in be.OPERANDS)
 
 
-def ensure_operands(params, backend_name: str):
+def ensure_operands(params, backend_name: str, place=None):
     """Return ``params`` with ``backend_name``'s kernel operands present on
     every SME-packed weight, packing any that are missing (concrete arrays
     required).  Used when an artifact compiled without operands is served
     with an explicit kernel backend: packing here, once at boot, is the
     only alternative to ``sme_apply`` silently falling back to xla inside
     the jitted program (where raw codes are traced and cannot be packed).
+
+    ``place(path, arr) -> arr`` is applied to every freshly packed operand
+    array (``path`` is the '/'-joined leaf path) — mesh-native boots pass
+    a placer that ``device_put``s each operand straight into its target
+    shards (``parallel.sharding.leaf_sharding``) instead of leaving it on
+    host for a later full-tree transfer.
     """
     be = get_backend(backend_name)
     if not be.OPERANDS:
         return params
 
-    def walk(tree):
+    def walk(tree, path):
         if isinstance(tree, dict):
             if "sme_codes" in tree:
                 if be.has_operands(tree):
                     return tree
                 out = dict(tree)
-                out.update({be.key(op): arr for op, arr in
-                            pack_param_operands(tree, be).items()})
+                for op, arr in pack_param_operands(tree, be).items():
+                    key = be.key(op)
+                    if place is not None:
+                        arr = place("/".join(path + [key]), arr)
+                    out[key] = arr
                 return out
-            return {k: walk(v) for k, v in tree.items()}
+            return {k: walk(v, path + [str(k)]) for k, v in tree.items()}
         if isinstance(tree, (list, tuple)):
-            return type(tree)(walk(s) for s in tree)
+            return type(tree)(walk(s, path + [str(i)])
+                              for i, s in enumerate(tree))
         return tree
 
-    return walk(params)
+    return walk(params, [])
 
 
 # weight identity -> packed operands; validated by weakref so a recycled
@@ -441,6 +451,18 @@ class SpmmV2Backend(SMEBackend):
 
 
 # ------------------------------------------------------------------ dispatch
+def _constrain_features(y: jax.Array) -> jax.Array:
+    """Pin a dispatch result to the active ShardPolicy's output-feature
+    layout (mesh-native serving, DESIGN.md §7): SME operand trees shard
+    whole output-column tiles over 'model', so the spliced result is
+    constrained to land sharded the same way instead of leaving GSPMD to
+    pick a layout per call site.  A no-op outside a policy context."""
+    from repro.parallel.policy import constrain, current_policy
+    if current_policy() is None:
+        return y
+    return constrain(y, "features")
+
+
 def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
               *, out_dtype=None, bm: int = 128,
               interpret: Optional[bool] = None) -> jax.Array:
@@ -450,7 +472,8 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
     leading stacked weight dims (MoE experts): when the param has lead dims
     ``E``, ``x`` must be [*E, ..., K] and each slice runs its own kernel
     call (the grids differ only in the nnz prefetch values, so they share
-    one compiled program).
+    one compiled program).  Under an active ShardPolicy (mesh serving) the
+    result is constrained to the policy's output-feature sharding.
     """
     be = resolve_backend(param, backend)
     if out_dtype is None:
@@ -478,12 +501,13 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
     if not be.OPERANDS:               # xla: dequant handles lead dims itself
         from .integrate import sme_dequant_jnp
         w = sme_dequant_jnp(param, dtype=x.dtype)
-        return jnp.matmul(x, w).astype(out_dtype)
+        return _constrain_features(jnp.matmul(x, w).astype(out_dtype))
 
     if not lead:
         x2d = x.reshape(-1, x.shape[-1])
         y = be.matmul2d(x2d, ops, param, bm=bm, interpret=interpret)
-        return y.reshape(*x.shape[:-1], n).astype(out_dtype)
+        return _constrain_features(
+            y.reshape(*x.shape[:-1], n).astype(out_dtype))
 
     nl = len(lead)
     if tuple(x.shape[:nl]) != lead:
@@ -506,4 +530,4 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
         ys.append(be.matmul2d(x2d, ops_i, param_i, bm=bm,
                               interpret=interpret))
     y = jnp.stack(ys).reshape(lead + inner + (n,))
-    return y.astype(out_dtype)
+    return _constrain_features(y.astype(out_dtype))

@@ -1,15 +1,24 @@
-"""Production mesh construction (task §MULTI-POD DRY-RUN).
+"""Production mesh construction (task §MULTI-POD DRY-RUN + mesh serving).
 
 ``make_production_mesh`` is a FUNCTION so importing this module never
 touches jax device state.  The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; ordinary tests/benches see the real (single) device.
+
+``parse_mesh`` / ``make_serve_mesh`` back the serving launcher's
+``--mesh data,model`` flag: CPU hosts get testable multi-device meshes by
+forcing host platform devices (``--host-devices N``, which the launcher
+must translate into XLA_FLAGS *before* the first jax import — jax locks
+the device count on first init).
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "parse_mesh",
+           "make_serve_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +31,28 @@ def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests use subprocesses with
     --xla_force_host_platform_device_count to get >1)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh(spec: str) -> Tuple[int, int]:
+    """'data,model' string -> (data, model), e.g. '2,2' -> (2, 2)."""
+    parts = spec.split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh expects 'data,model' (e.g. 2,2), got {spec!r}")
+    data, model = (int(p) for p in parts)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return data, model
+
+
+def make_serve_mesh(spec: str):
+    """('data,model' string) -> Mesh, validated against visible devices."""
+    data, model = parse_mesh(spec)
+    need = data * model
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {spec} needs {need} devices but only {have} are "
+            f"visible; on CPU pass --host-devices {need} (sets "
+            f"--xla_force_host_platform_device_count before jax init)")
+    return make_local_mesh(data, model)

@@ -8,15 +8,40 @@ all slots with one vectorized call per step — per-slot ``pos`` and an
 cannot cross-corrupt slot caches (DESIGN.md §6).  CI runs this as a smoke
 step with ``--sme --backend v1``.
 
+Serving is mesh-native (DESIGN.md §7): ``--mesh data,model`` places params
+and slot caches across a device mesh (bit-identical tokens to the default
+1x1 mesh); on a CPU host add ``--host-devices N`` to fabricate N devices
+(translated into ``--xla_force_host_platform_device_count`` before the
+first jax import).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 6 --max-new 12 [--sme] [--squeeze 1]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --d-model 256 --d-ff 512 --artifact qwen.smez
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --host-devices 8 --mesh 2,2 --sme --backend v1
 """
 from __future__ import annotations
 
-import argparse
 import os
+import sys
+
+# --host-devices must take effect before the first jax import (jax locks
+# the device count on first init), so it is sniffed from argv here —
+# both "--host-devices 8" and "--host-devices=8" forms — and only echoed
+# into argparse below for --help/validation (argparse reports malformed
+# values; the sniff just skips them).
+for _i, _a in enumerate(sys.argv):
+    if _a == "--host-devices" or _a.startswith("--host-devices="):
+        _v = (_a.split("=", 1)[1] if "=" in _a
+              else sys.argv[_i + 1] if _i + 1 < len(sys.argv) else "")
+        if _v.isdigit():
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={_v}").strip()
+        break
+
+import argparse
 import time
 
 import jax
@@ -48,7 +73,18 @@ def main():
                     help="SME execution backend; v1/v2 pre-pack kernel "
                          "operands offline and serve through the Pallas "
                          "block-sparse kernels (interpret mode off-TPU)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="serving mesh as 'data,model' (e.g. 2,2); params "
+                         "and slot caches shard across it with bit-"
+                         "identical tokens to 1,1 (DESIGN.md §7)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N CPU host devices (must be first-init; "
+                         "handled before the jax import above)")
     args = ap.parse_args()
+
+    from repro.launch.mesh import make_serve_mesh
+    mesh = make_serve_mesh(args.mesh)
+    print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices")
 
     cfg = scaled_config(args)
     api = build_model(cfg)
@@ -73,7 +109,7 @@ def main():
                 f"--d-ff/... the artifact was compiled with")
         kw = {} if args.backend == "auto" else {"backend": args.backend}
         t0 = time.time()
-        eng = ServeEngine.from_artifact(api, args.artifact,
+        eng = ServeEngine.from_artifact(api, args.artifact, mesh=mesh,
                                         slots=args.slots, s_max=args.s_max,
                                         **kw)
         print(f"booted from {args.artifact} in {time.time() - t0:.2f}s "
@@ -96,7 +132,8 @@ def main():
             print("SME storage:", sme_storage_summary(params))
             print(f"SME backend: {args.backend}")
         eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
-                          backend=args.backend if args.sme else None)
+                          backend=args.backend if args.sme else None,
+                          mesh=mesh)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

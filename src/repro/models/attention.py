@@ -187,6 +187,24 @@ def _masked_row_scatter(cache, new, slot, active):
         jnp.where(upd, new.astype(cache.dtype), keep))
 
 
+def _ring_gather(kv, plen, w):
+    """kv:[B,S,...] -> ring cache [B,w,...] for a ragged prefill batch.
+
+    Slot ``j`` of row ``i`` holds position ``p`` = the largest
+    ``p < plen[i]`` with ``p % w == j`` (zeros where no such position
+    exists) — exactly the layout ``gqa_decode`` derives its ``kpos`` from,
+    and bit-identical to the dense scatter it replaces when
+    ``plen == S`` for every row (padded positions never enter the ring)."""
+    b, s = kv.shape[:2]
+    j = jnp.arange(w)
+    pm1 = plen[:, None] - 1
+    p = pm1 - ((pm1 - j[None]) % w)                       # [B, w]
+    valid = (p >= 0).reshape((b, w) + (1,) * (kv.ndim - 2))
+    idx = jnp.clip(p, 0, s - 1).reshape((b, w) + (1,) * (kv.ndim - 2))
+    out = jnp.take_along_axis(kv, idx, axis=1)
+    return jnp.where(valid, out, jnp.zeros((), kv.dtype))
+
+
 # ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------
@@ -225,10 +243,17 @@ def _repeat_kv(k, v, h):
 
 
 def gqa_prefill(p, x, cfg, window: int = 0, causal: bool = True,
-                cache_len: int = 0, block_q: int = 512, block_k: int = 512):
+                cache_len: int = 0, block_q: int = 512, block_k: int = 512,
+                plen=None):
     """Full-sequence self-attention. Returns (y, (k_cache, v_cache, kpos))
     where the cache holds the last ``min(window or S, cache_len or S)``
-    entries in ring order (ready for gqa_decode)."""
+    entries in ring order (ready for gqa_decode).
+
+    ``plen`` ([B] int32, optional) is the per-row valid prefix length of a
+    ragged (right-padded) prefill batch: row ``i``'s ring cache holds only
+    positions ``< plen[i]`` — causality already keeps padded positions out
+    of every real position's attention output, so one padded prefill call
+    is bit-identical per row to an unpadded call (DESIGN.md §7)."""
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
     q, k, v = _qkv(p, x, cfg, positions)
@@ -239,16 +264,10 @@ def gqa_prefill(p, x, cfg, window: int = 0, causal: bool = True,
     cache = None
     if cache_len:
         w = min(window, cache_len) if window else cache_len
-        kc = jnp.zeros((b, w) + k.shape[2:], k.dtype)
-        vc = jnp.zeros_like(kc)
-        take = min(w, s)
-        # last `take` tokens land at slots pos % w (ring order)
-        last_k = k[:, s - take:]
-        last_v = v[:, s - take:]
-        slots = (jnp.arange(s - take, s)) % w
-        kc = kc.at[:, slots].set(last_k)
-        vc = vc.at[:, slots].set(last_v)
-        cache = {"k": kc, "v": vc}
+        rows = (jnp.full((b,), s, jnp.int32) if plen is None
+                else jnp.asarray(plen, jnp.int32))
+        cache = {"k": _ring_gather(k, rows, w),
+                 "v": _ring_gather(v, rows, w)}
     return y, cache
 
 
@@ -306,7 +325,11 @@ def _mla_q(p, x, cfg, positions):
 
 
 def mla_prefill(p, x, cfg, cache_len: int = 0, block_q: int = 512,
-                block_k: int = 512):
+                block_k: int = 512, plen=None):
+    """``plen`` ([B] int32, optional): per-row valid prefix length of a
+    ragged prefill batch — positions ``>= plen[i]`` are zeroed in row
+    ``i``'s compressed cache (matching the zeros an unpadded prefill of
+    length ``plen[i]`` leaves there)."""
     b, s, _ = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
     positions = jnp.arange(s)[None, :]
@@ -329,8 +352,14 @@ def mla_prefill(p, x, cfg, cache_len: int = 0, block_q: int = 512,
         cc = jnp.zeros((b, cache_len, cfg.kv_lora), c.dtype)
         pc = jnp.zeros((b, cache_len, dr), c.dtype)
         take = min(cache_len, s)
-        cc = cc.at[:, :take].set(c[:, s - take:])
-        pc = pc.at[:, :take].set(k_pe[:, s - take:, 0])
+        c_w, pe_w = c, k_pe[:, :, 0]
+        if plen is not None:
+            keep = (jnp.arange(s) < jnp.asarray(plen, jnp.int32)[:, None]
+                    )[..., None]
+            c_w = jnp.where(keep, c_w, jnp.zeros((), c.dtype))
+            pe_w = jnp.where(keep, pe_w, jnp.zeros((), c.dtype))
+        cc = cc.at[:, :take].set(c_w[:, s - take:])
+        pc = pc.at[:, :take].set(pe_w[:, s - take:])
         cache = {"c": cc, "k_pe": pc}
     return y, cache
 

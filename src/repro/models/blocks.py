@@ -46,11 +46,12 @@ def block_init(init: Initializer, cfg, kind: str, use_moe: bool):
     return p
 
 
-def _mlp_half(p, x, cfg, use_moe):
+def _mlp_half(p, x, cfg, use_moe, plen=None):
     if "mlp" not in p:
         return x
     h = apply_norm(x, p["norm2"], cfg.norm)
-    h = moe_apply(p["mlp"], h, cfg) if use_moe else mlp_apply(h, p["mlp"], cfg.act)
+    h = (moe_apply(p["mlp"], h, cfg, plen=plen) if use_moe
+         else mlp_apply(h, p["mlp"], cfg.act))
     return x + h
 
 
@@ -74,25 +75,33 @@ def block_train(p, x, cfg, kind: str, use_moe: bool,
 
 
 def block_prefill(p, x, cfg, kind: str, use_moe: bool, cache_len: int,
-                  block_q: int = 512, block_k: int = 512):
+                  block_q: int = 512, block_k: int = 512, plen=None):
+    """``plen`` ([B] int32, optional): per-row valid prefix length of a
+    ragged (right-padded) prefill batch — each row's cache/state covers
+    exactly its own ``plen[i]`` positions (DESIGN.md §7)."""
     h = apply_norm(x, p["norm1"], cfg.norm)
     if kind in ATTN_KINDS:
         if cfg.attn_type == "mla":
             y, cache = att.mla_prefill(p["mix"], h, cfg, cache_len=cache_len,
-                                       block_q=block_q, block_k=block_k)
+                                       block_q=block_q, block_k=block_k,
+                                       plen=plen)
         else:
             y, cache = att.gqa_prefill(p["mix"], h, cfg,
                                        window=_window(cfg, kind),
                                        cache_len=cache_len,
-                                       block_q=block_q, block_k=block_k)
+                                       block_q=block_q, block_k=block_k,
+                                       plen=plen)
     elif kind == "mamba":
-        y, cache = ssm.mamba_apply(p["mix"], h, cfg, want_state=True)
+        y, cache = ssm.mamba_apply(p["mix"], h, cfg, want_state=True,
+                                   plen=plen)
     elif kind == "mlstm":
-        y, cache = ssm.mlstm_apply(p["mix"], h, cfg, want_state=True)
+        y, cache = ssm.mlstm_apply(p["mix"], h, cfg, want_state=True,
+                                   plen=plen)
     else:
-        y, cache = ssm.slstm_apply(p["mix"], h, cfg, want_state=True)
+        y, cache = ssm.slstm_apply(p["mix"], h, cfg, want_state=True,
+                                   plen=plen)
     x = x + y
-    return _mlp_half(p, x, cfg, use_moe), cache
+    return _mlp_half(p, x, cfg, use_moe, plen=plen), cache
 
 
 def block_decode(p, x, cache, pos, cfg, kind: str, use_moe: bool,

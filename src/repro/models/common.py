@@ -81,7 +81,11 @@ def apply_norm(x, p, kind):
 def linear(x, p, backend=None):
     """x @ w (+ b).  SME-packed weights dispatch through the execution
     backend registry (``core.backend``): XLA dequant, or the Pallas
-    block-sparse kernels when selected/packed (DESIGN.md §3)."""
+    block-sparse kernels when selected/packed (DESIGN.md §3).  Under an
+    exact-posture ShardPolicy (mesh serving, DESIGN.md §7) the input is
+    pinned feature-replicated so the contraction never shards."""
+    from repro.parallel.policy import constrain
+    x = constrain(x, "lhs")
     we = p["w"]
     if isinstance(we, dict) and "sme_codes" in we:
         from repro.core.backend import sme_apply

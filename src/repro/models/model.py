@@ -5,7 +5,10 @@ dry-run, trainer and serving engine are architecture-agnostic:
 
   * ``init_params(rng)``                    (use jax.eval_shape for dry-run)
   * ``train_loss(params, batch)``           scalar loss
-  * ``prefill(params, batch)``              -> (last logits, caches)
+  * ``prefill(params, batch, plen=None)``   -> (last logits, caches);
+    ``plen`` is an optional per-row ``[B]`` int32 valid-prefix-length
+    vector for ragged right-padded prefill batches (decoder-only
+    family; DESIGN.md §7)
   * ``decode_step(params, token, caches, pos, active=None)``
     -> (logits, caches); ``pos`` is a per-row ``[B]`` int32 position
     vector (a scalar broadcasts) and ``active`` a ``[B]`` bool mask —
@@ -76,9 +79,9 @@ def _build_lm(cfg, shape, bq):
     def init_cache(batch: int, s_max: int):
         return tf.lm_init_cache(cfg, batch, s_max)
 
-    def prefill(params, batch, s_max: Optional[int] = None):
+    def prefill(params, batch, s_max: Optional[int] = None, plen=None):
         s_max = s_max or batch["tokens"].shape[1]
-        return tf.lm_prefill(params, batch, cfg, s_max, **bq)
+        return tf.lm_prefill(params, batch, cfg, s_max, plen=plen, **bq)
 
     def decode_step(params, token, caches, pos, active=None):
         return tf.lm_decode_step(params, token, caches, pos, cfg,

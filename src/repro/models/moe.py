@@ -51,15 +51,21 @@ def moe_init(init: Initializer, cfg):
     return p
 
 
-def _group_dispatch(xg, idx, wgt, n_experts: int, capacity: int):
-    """xg:[S,D] idx/wgt:[S,k] -> (buf [E,C,D], slot [S*k], keep [S*k])."""
+def _group_dispatch(xg, idx, wgt, n_experts: int, capacity: int,
+                    threshold=None):
+    """xg:[S,D] idx/wgt:[S,k] -> (buf [E,C,D], slot [S*k], keep [S*k]).
+
+    ``capacity`` sizes the (static) buffers; ``threshold`` (traced scalar
+    <= capacity, default = capacity) is the drop bound — ragged prefill
+    passes the valid-length-derived bound so padding cannot change which
+    tokens overflow."""
     s, d = xg.shape
     k = idx.shape[-1]
     flat_e = idx.reshape(-1)
     oh = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
     pos = jnp.cumsum(oh, axis=0) - 1
     pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
-    keep = pos < capacity
+    keep = pos < (capacity if threshold is None else threshold)
     slot = jnp.where(keep, pos, capacity)            # overflow -> scratch slot
     tok = jnp.arange(s * k) // k
     buf = jnp.zeros((n_experts, capacity + 1, d), xg.dtype)
@@ -67,12 +73,21 @@ def _group_dispatch(xg, idx, wgt, n_experts: int, capacity: int):
     return buf[:, :capacity], flat_e, slot, keep
 
 
-def moe_apply(p, x, cfg, group_size: int = 2048):
+def moe_apply(p, x, cfg, group_size: int = 2048, plen=None):
     """x: [B, S, D] -> [B, S, D].
 
     Dispatch groups are sequence segments of at most ``group_size`` tokens:
     capacity (and the [E, C, F] expert-hidden buffers) scale with the
-    segment, not the full 32k sequence — the standard group-size lever."""
+    segment, not the full 32k sequence — the standard group-size lever.
+
+    ``plen`` ([B] int32, optional): per-row valid prefix length of a
+    ragged (right-padded) prefill batch.  Each group's capacity-drop
+    threshold is then derived from its *valid* token count rather than
+    the padded group length, so a request sees identical drop decisions
+    however much padding its admission window added — the property that
+    keeps ragged serving bit-identical to solo decoding (DESIGN.md §7).
+    Padded tokens sit after the valid prefix in dispatch order, so they
+    can never displace a valid token's buffer slot."""
     b0, s0, d = x.shape
     g = min(group_size, s0)
     pad = (-s0) % g
@@ -82,6 +97,19 @@ def moe_apply(p, x, cfg, group_size: int = 2048):
     b, s, _ = x.shape
     e, k = cfg.n_experts, cfg.top_k
     cap = moe_capacity(s, cfg)
+    if plen is None:
+        thr = jnp.full((b,), cap, jnp.int32)
+    else:
+        gpr = b // b0                     # groups per row
+        row = jnp.arange(b) // gpr
+        seg = jnp.arange(b) % gpr
+        valid = jnp.clip(jnp.asarray(plen, jnp.int32)[row] - seg * s, 0, s)
+        # same formula as moe_capacity, on the valid count; clamped to the
+        # static buffer bound (f32 vs f64 rounding can differ by one at
+        # exact integer boundaries, and the buffer is sized by ``cap``)
+        thr = (valid.astype(jnp.float32) * k / e * cfg.capacity_factor
+               + 0.999).astype(jnp.int32)
+        thr = jnp.clip(thr, 1, cap)
 
     logits = jnp.einsum("bsd,de->bse", x, p["router"]["w"].astype(x.dtype))
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
@@ -90,15 +118,20 @@ def moe_apply(p, x, cfg, group_size: int = 2048):
 
     def expert_mm(name, h):
         """h [E, C, D] @ p[name] [E, D, F] -> [E, C, F], through the SME
-        execution-backend registry for packed weights (stacked dispatch)."""
+        execution-backend registry for packed weights (stacked dispatch).
+        The dispatch buffer is pinned replicated under the exact serving
+        posture (its D dim is the contraction; DESIGN.md §7)."""
+        from repro.parallel.policy import constrain
+        h = constrain(h, "lhs")
         q = p[name]
         if isinstance(q, dict) and "sme_codes" in q:
             from repro.core.backend import sme_apply
             return sme_apply(h, q, out_dtype=x.dtype)
         return jnp.matmul(h, q.astype(x.dtype))
 
-    def per_group(xg, idxg, wg_):
-        buf, flat_e, slot, keep = _group_dispatch(xg, idxg, wg_, e, cap)
+    def per_group(xg, idxg, wg_, thr_g):
+        buf, flat_e, slot, keep = _group_dispatch(xg, idxg, wg_, e, cap,
+                                                  thr_g)
         # expert SwiGLU, batched over E
         h = jax.nn.silu(expert_mm("wg", buf)) * expert_mm("wi", buf)
         out = expert_mm("wo", h)
@@ -111,9 +144,9 @@ def moe_apply(p, x, cfg, group_size: int = 2048):
         # sequential over groups: one group's [E, C, F] buffers live at a
         # time (prefill/train memory); decode (s==1) stays vmapped.
         y = jax.lax.map(jax.checkpoint(lambda a: per_group(*a)),
-                        (x, idx, wgt))
+                        (x, idx, wgt, thr))
     else:
-        y = jax.vmap(per_group)(x, idx, wgt)
+        y = jax.vmap(per_group)(x, idx, wgt, thr)
     y = y.reshape(b0, -1, d)[:, :s0]
     x = x.reshape(b0, -1, d)[:, :s0]
     if "shared" in p:

@@ -88,8 +88,12 @@ def mamba_init(init: Initializer, cfg):
     }
 
 
-def _mamba_core(p, xc, z, cfg, h0):
-    """xc (post conv): [B,S,d_in]; returns y [B,S,d_in] and final h."""
+def _mamba_core(p, xc, z, cfg, h0, tmask=None):
+    """xc (post conv): [B,S,d_in]; returns y [B,S,d_in] and final h.
+
+    ``tmask`` ([B,S] bool, optional) freezes the recurrent state per row at
+    masked steps — a ragged (right-padded) prefill batch ends each row's
+    state at exactly its own length (DESIGN.md §7)."""
     d_in, dt_rank, n = _mamba_dims(cfg)
     bsz, s, _ = xc.shape
     proj = linear(xc, p["x_proj"])
@@ -98,14 +102,15 @@ def _mamba_core(p, xc, z, cfg, h0):
     a = -jnp.exp(p["A_log"].astype(jnp.float32))              # [d_in, n]
 
     def step(h, args):
-        u_t, dt_t, b_t, c_t = args
+        u_t, dt_t, b_t, c_t, m_t = args
         u_t = u_t.astype(jnp.float32)
         dt_t = dt_t.astype(jnp.float32)
         b_t = b_t.astype(jnp.float32)
         c_t = c_t.astype(jnp.float32)
         da = jnp.exp(dt_t[..., None] * a[None])               # [B,d_in,n]
-        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
-        y_t = (h * c_t[:, None, :]).sum(-1)
+        h_new = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = jnp.where(m_t[:, 0][:, None, None], h_new, h)
+        y_t = (h_new * c_t[:, None, :]).sum(-1)
         return h, y_t
 
     # two-level scan: outer over chunks (boundary states saved for the
@@ -118,7 +123,9 @@ def _mamba_core(p, xc, z, cfg, h0):
         tm = jnp.moveaxis(tp, 1, 0)
         return tm.reshape(-1, chunk, *tm.shape[1:])
 
-    xs = (_c(xc), _c(dt), _c(bmat), _c(cmat))
+    if tmask is None:
+        tmask = jnp.ones((bsz, s), bool)
+    xs = (_c(xc), _c(dt), _c(bmat), _c(cmat), _c(tmask[..., None]))
 
     @jax.checkpoint
     def chunk_step(h, args):
@@ -132,21 +139,39 @@ def _mamba_core(p, xc, z, cfg, h0):
     return y * jax.nn.silu(z), h
 
 
-def mamba_apply(p, x, cfg, want_state: bool = False):
-    """x:[B,S,D] -> (y, state|None). state=(conv_state, h)."""
+def _tail_window(xr, plen, k):
+    """Per-row last ``k-1`` inputs before ``plen`` (zeros where the row is
+    shorter) — the ragged-batch form of the decode conv state."""
+    b, s, _ = xr.shape
+    j = jnp.arange(k - 1)
+    idx = jnp.asarray(plen, jnp.int32)[:, None] - (k - 1) + j  # [B, k-1]
+    valid = (idx >= 0)[..., None]
+    gathered = jnp.take_along_axis(xr, jnp.clip(idx, 0, s - 1)[..., None],
+                                   axis=1)
+    return jnp.where(valid, gathered, jnp.zeros((), xr.dtype))
+
+
+def mamba_apply(p, x, cfg, want_state: bool = False, plen=None):
+    """x:[B,S,D] -> (y, state|None). state=(conv_state, h).
+
+    ``plen`` ([B] int32, optional): per-row valid prefix length of a
+    ragged prefill batch — the returned state (conv window and final h)
+    is row ``i``'s state after exactly ``plen[i]`` steps."""
     d_in, _, n = _mamba_dims(cfg)
     xz = linear(x, p["in_proj"])
     xr, z = jnp.split(xz, 2, axis=-1)
     xc = _causal_conv(xr, p["conv_w"], p["conv_b"])
     h0 = jnp.zeros((x.shape[0], d_in, n), jnp.float32)
-    y, h = _mamba_core(p, xc, z, cfg, h0)
+    tmask = (None if plen is None else
+             jnp.arange(x.shape[1]) < jnp.asarray(plen, jnp.int32)[:, None])
+    y, h = _mamba_core(p, xc, z, cfg, h0, tmask=tmask)
     y = linear(y, p["out_proj"])
     state = None
     if want_state:
         k = cfg.ssm_conv
-        conv_state = jnp.pad(xr, ((0, 0), (max(k - 1 - x.shape[1], 0), 0), (0, 0))
-                             )[:, -(k - 1):]
-        state = {"conv": conv_state, "h": h}
+        rows = (jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+                if plen is None else plen)
+        state = {"conv": _tail_window(xr, rows, k), "h": h}
     return y, state
 
 
@@ -188,6 +213,8 @@ def mlstm_init(init: Initializer, cfg):
 
 
 def _mlstm_qkv(p, xr, nh, dh):
+    from repro.parallel.policy import constrain
+    xr = constrain(xr, "lhs")       # per-head einsums contract dh slices
     b, s, _ = xr.shape
     xh = xr.reshape(b, s, nh, dh)
     q = jnp.einsum("bsnd,nde->bsne", xh, p["q"].astype(xr.dtype))
@@ -257,12 +284,24 @@ def _mlstm_chunk_scan(q, k, v, ig, fg, chunk: int, state0):
     return h, (c_st, n_st, m_st)
 
 
-def mlstm_apply(p, x, cfg, want_state: bool = False, chunk: int = 1024):
+def mlstm_apply(p, x, cfg, want_state: bool = False, chunk: int = 1024,
+                plen=None):
+    """``plen`` ([B] int32, optional): per-row valid prefix length of a
+    ragged prefill batch.  Padded steps get ``i = -inf`` (no input) and
+    ``log f = 0`` (no decay), which freezes the recurrence exactly — the
+    chunkwise form then yields bit-identical states to stopping each row
+    at its own length (as long as the batch fits one chunk, which the
+    serving engine's prompt lengths always do)."""
     d_in, nh, dh = _mlstm_dims(cfg)
     b, s, _ = x.shape
     up = linear(x, p["up"])
     xr, z = jnp.split(up, 2, axis=-1)
     q, k, v, ig, fg = _mlstm_qkv(p, xr, nh, dh)
+    if plen is not None:
+        keep = (jnp.arange(s) < jnp.asarray(plen, jnp.int32)[:, None]
+                )[..., None]                                  # [B,S,1]
+        ig = jnp.where(keep, ig, -jnp.inf)
+        fg = jnp.where(keep, fg, 0.0)
     chunk = min(chunk, s)
     if s % chunk:
         pad = chunk - s % chunk
@@ -335,8 +374,9 @@ def slstm_init(init: Initializer, cfg):
     }
 
 
-def _slstm_scan(p, wx, cfg, state0):
-    """wx: precomputed input projections [B,S,4D]."""
+def _slstm_scan(p, wx, cfg, state0, tmask=None):
+    """wx: precomputed input projections [B,S,4D].  ``tmask`` ([B,S] bool,
+    optional) freezes each row's carry at masked steps (ragged prefill)."""
     d = cfg.d_model
     nh = cfg.n_heads
     dh = d // nh
@@ -345,18 +385,22 @@ def _slstm_scan(p, wx, cfg, state0):
     bias = p["b"].astype(jnp.float32).reshape(4, d)
 
     def step(carry, t):
-        c, n, h, m = carry                                   # all [B,D] f32
-        hh = h.reshape(b, nh, dh)
+        c0, n0, h0, m0 = carry                               # all [B,D] f32
+        hh = h0.reshape(b, nh, dh)
         rec = jnp.einsum("bnd,gnde->gbne", hh, r).reshape(4, b, d)
         raw = wx[:, t].astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) \
             + rec + bias[:, None]
         i_r, f_r, z_r, o_r = raw
-        m_new = jnp.maximum(f_r + m, i_r)
+        m_new = jnp.maximum(f_r + m0, i_r)
         i_g = jnp.exp(i_r - m_new)
-        f_g = jnp.exp(f_r + m - m_new)
-        c = f_g * c + i_g * jnp.tanh(z_r)
-        n = f_g * n + i_g
+        f_g = jnp.exp(f_r + m0 - m_new)
+        c = f_g * c0 + i_g * jnp.tanh(z_r)
+        n = f_g * n0 + i_g
         h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        if tmask is not None:
+            sel = tmask[:, t][:, None]
+            c, n, h, m_new = (jnp.where(sel, a, o) for a, o in
+                              ((c, c0), (n, n0), (h, h0), (m_new, m0)))
         return (c, n, h, m_new), h
 
     (c, n, h, m), hs = jax.lax.scan(step, state0, jnp.arange(wx.shape[1]))
@@ -369,10 +413,13 @@ def slstm_state_init(cfg, batch: int):
     return (z, z, z, z - 10.0)
 
 
-def slstm_apply(p, x, cfg, want_state: bool = False):
+def slstm_apply(p, x, cfg, want_state: bool = False, plen=None):
     b, s, d = x.shape
     wx = linear(x, p["wx"])
-    hs, state = _slstm_scan(p, wx, cfg, slstm_state_init(cfg, b))
+    tmask = (None if plen is None else
+             jnp.arange(s) < jnp.asarray(plen, jnp.int32)[:, None])
+    hs, state = _slstm_scan(p, wx, cfg, slstm_state_init(cfg, b),
+                            tmask=tmask)
     y = hs.astype(x.dtype)
     ff = jax.nn.silu(linear(y, {"w": p["ff_wg"]["w"]})) * linear(y, {"w": p["ff_wi"]["w"]})
     y = linear(ff, {"w": p["ff_wo"]["w"]})

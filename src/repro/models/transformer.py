@@ -102,7 +102,8 @@ def _embed_tokens(params, cfg, batch):
 
 
 def _run_first(params, cfg, x, mode, caches=None, pos=None,
-               cache_len: int = 0, block_q=512, block_k=512, active=None):
+               cache_len: int = 0, block_q=512, block_k=512, active=None,
+               plen=None):
     new_caches = []
     for i in range(cfg.first_dense_layers):
         p = params[f"first{i}"]
@@ -110,7 +111,7 @@ def _run_first(params, cfg, x, mode, caches=None, pos=None,
             x = block_train(p, x, cfg, "attn", False, block_q, block_k)
         elif mode == "prefill":
             x, c = block_prefill(p, x, cfg, "attn", False, cache_len,
-                                 block_q, block_k)
+                                 block_q, block_k, plen=plen)
             new_caches.append(c)
         else:
             x, c = block_decode(p, x, caches[i], pos, cfg, "attn", False,
@@ -201,25 +202,40 @@ def lm_init_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16):
 
 
 def lm_prefill(params, batch, cfg, s_max: int,
-               block_q: int = 512, block_k: int = 512):
-    """Returns (last-token logits [B, V], caches dict)."""
+               block_q: int = 512, block_k: int = 512, plen=None):
+    """Returns (last-token logits [B, V], caches dict).
+
+    ``plen`` ([B] int32, optional) marks each row's valid prefix length in
+    a ragged (right-padded) prefill batch — including any frontend tokens.
+    Causality keeps the padded suffix out of every valid position, caches
+    and recurrent states stop per row at ``plen[i]``, and the returned
+    logits are taken at each row's own last valid position, so one padded
+    call is bit-identical per row to one unpadded call per request
+    (DESIGN.md §7)."""
     kinds = _slot_kinds(cfg)
     x = constrain(_embed_tokens(params, cfg, batch), "act")
     x, first_caches = _run_first(params, cfg, x, "prefill",
-                                 cache_len=s_max, block_q=block_q, block_k=block_k)
+                                 cache_len=s_max, block_q=block_q,
+                                 block_k=block_k, plen=plen)
 
     def body(h, slot_params):
         caches = {}
         for j, kind in enumerate(kinds):
             h, c = block_prefill(slot_params[f"slot{j}"], h, cfg, kind,
-                                 cfg.moe_for_slot(j), s_max, block_q, block_k)
+                                 cfg.moe_for_slot(j), s_max, block_q, block_k,
+                                 plen=plen)
             h = constrain(h, "act")
             caches[f"slot{j}"] = c
         return h, caches
 
     x, block_caches = jax.lax.scan(body, x, params["blocks"])
     x = apply_norm(x, params["final_norm"], cfg.norm)
-    logits = _head_logits(params, cfg, x[:, -1])
+    if plen is None:
+        xl = x[:, -1]
+    else:
+        last = jnp.clip(jnp.asarray(plen, jnp.int32) - 1, 0, x.shape[1] - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = _head_logits(params, cfg, xl)
     return logits, {"first": first_caches, "blocks": block_caches}
 
 

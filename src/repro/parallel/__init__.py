@@ -1,5 +1,5 @@
 """Distribution: sharding rules, gradient compression, collective helpers."""
 from .sharding import (
     param_sharding, cache_sharding, batch_sharding, dp_axes, tree_shardings,
-    replicated,
+    replicated, leaf_sharding, place_tree,
 )

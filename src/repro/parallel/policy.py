@@ -41,6 +41,10 @@ class ShardPolicy:
     full_dp: bool = False               # small-model mode: batch over model too
     remat_policy: str = "full"          # full | dots (save dot outputs)
     loss_chunk: int = 0                 # 0 = model default (128)
+    exact: bool = False                 # serving posture (DESIGN.md §7):
+    #   matmul LHS activations are pinned feature-replicated so GSPMD must
+    #   all-gather (exact) instead of partial-summing a sharded
+    #   contraction (reassociates floats across devices)
 
     def batch_axes(self, b: int):
         if self.dp_size > 1 and b % self.dp_size == 0:
@@ -86,23 +90,63 @@ def _wsc(x, spec):
         return x  # no mesh in context (plain CPU run)
 
 
+def _wsc_hint(x, spec):
+    """Placement-hint constraint: skipped when the spec carries no axis.
+
+    An all-None constraint places nothing, but the sharding custom-call it
+    inserts still perturbs the partitioner's downstream codegen — on the
+    CPU backend a no-op constraint inside a scanned block measurably
+    changes float rounding between partition counts, which would break the
+    serving exactness contract (DESIGN.md §7).  Only 'lhs' (which must
+    *force* replication to exclude sharded contractions) keeps its
+    constraint when all-None."""
+    if all(ax is None for ax in spec):
+        return x
+    return _wsc(x, spec)
+
+
 def constrain(x, kind: str):
-    """kind: 'act' [B,S,D] | 'heads' [B,S,H,hd] | 'kv' [B,S,KV,hd]."""
+    """kind: 'act' [B,S,D] | 'heads' [B,S,H,hd] | 'kv' [B,S,KV,hd]
+    | 'features' [..., N] (output features of a sharded matmul)
+    | 'lhs' (matmul left operand under the exact serving posture)."""
     pol = current_policy()
     if pol is None:
         return x
+    if kind == "lhs":
+        # exact posture only: replicate the activation entering a matmul
+        # so its contraction dim can never be sharded — GSPMD is forced
+        # into the all-gather (bit-exact) strategy, never the partial-sum
+        # all-reduce whose float reassociation differs across mesh shapes
+        if not pol.exact or pol.model_size <= 1:
+            return x
+        return _wsc(x, P(*([None] * x.ndim)))
+    if kind == "features":
+        # output-feature sharding for the SME backend dispatch: the packed
+        # operand trees shard whole output columns over 'model', so the
+        # splice result lands already sharded the same way — this pins the
+        # layout so GSPMD never round-trips it through a gather+reshard
+        n = x.shape[-1]
+        ax = "model" if (pol.model_size > 1
+                         and n % pol.model_size == 0) else None
+        return _wsc_hint(x, P(*([None] * (x.ndim - 1) + [ax])))
     b = x.shape[0]
-    bax = pol.dp if (pol.dp_size > 1 and b % pol.dp_size == 0) else None
+    # exact posture: activations never shard on batch either — XLA:CPU
+    # evaluates a row-sharded scan body at a different vector width than
+    # the full-batch body (1-ULP transcendental drift between mesh
+    # shapes); serving batches are slot-sized, so replicated activations
+    # cost nothing while weights/caches keep the sharded-memory win
+    bax = (pol.dp if (not pol.exact and pol.dp_size > 1
+                      and b % pol.dp_size == 0) else None)
     if kind == "act":
         seq = pol.seq_axis if (pol.seq_axis and
                                x.shape[1] % pol.model_size == 0) else None
-        return _wsc(x, P(bax, seq, None))
+        return _wsc_hint(x, P(bax, seq, None))
     if kind == "heads":
         if pol.heads_tp and x.shape[2] % pol.model_size == 0:
-            return _wsc(x, P(bax, None, "model", None))
+            return _wsc_hint(x, P(bax, None, "model", None))
         seq = pol.seq_axis if (pol.seq_axis and
                                x.shape[1] % pol.model_size == 0) else None
-        return _wsc(x, P(bax, seq, None, None))
+        return _wsc_hint(x, P(bax, seq, None, None))
     if kind == "kv":
         # pre-repeated K/V follow the same layout as q heads
         return constrain(x, "heads")

@@ -10,6 +10,23 @@ Axes:
 Every rule checks divisibility and silently drops an axis that does not
 divide the dimension (e.g. whisper's vocab 51865 stays replicated) — the
 dry-run proves whatever remains compiles and fits.
+
+Two numerics postures share these rules (DESIGN.md §7):
+
+  * **throughput** (default, the dry-run/trainer): FSDP shards contraction
+    dims, decode caches sequence-shard over 'model' — collectives may
+    reassociate float reductions, so results are only approximately equal
+    across mesh shapes;
+  * **exact** (``exact=True``, the serving engine): only output-feature /
+    head / channel / batch dims are ever sharded — no float reduction
+    crosses a device boundary, so any mesh shape is bit-identical to the
+    1x1 mesh.  This is the system analogue of the paper's bit-slice
+    splicing staying inside one crossbar column group: a shard owns whole
+    output features, so splicing partial products never crosses shards.
+
+SME-packed leaves (``sme_codes``/operand trees) shard along the
+output-feature (column-tile) axis for the same reason; small scale /
+index / permutation leaves are replicated.
 """
 from __future__ import annotations
 
@@ -20,7 +37,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_sharding", "cache_sharding", "batch_sharding",
-           "dp_axes", "axis_size", "tree_shardings", "replicated"]
+           "dp_axes", "axis_size", "tree_shardings", "replicated",
+           "leaf_sharding", "place_tree"]
 
 
 def axis_size(mesh: Mesh, name: str) -> int:
@@ -31,20 +49,39 @@ def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def _fits(dim: int, mesh: Mesh, axes) -> bool:
+#: exact-posture shard floor: never split a dim into shards smaller than
+#: this many elements.  Sub-SIMD shards make XLA:CPU evaluate fused
+#: transcendentals (rope cos/sin, gate exp) through scalar remainder paths
+#: whose ULPs differ from the vectorized path — a 1-ULP divergence between
+#: mesh shapes that the serving bit-identity contract forbids
+#: (DESIGN.md §7).  64 keeps every shard a whole number of SIMD packets
+#: for f32/bf16 on AVX-512 and below.
+EXACT_MIN_SHARD = 64
+
+
+def _fits(dim: int, mesh: Mesh, axes, min_shard: int = 1) -> bool:
     if axes is None:
         return True
     if isinstance(axes, str):
         axes = (axes,)
     n = int(np.prod([axis_size(mesh, a) for a in axes]))
+    if n > 1 and dim // n < min_shard:
+        return False
     return dim % n == 0
 
 
-def _spec(mesh: Mesh, shape, *axes) -> P:
-    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+def _spec(mesh: Mesh, shape, *axes, min_shard_last: int = 1) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim.
+
+    ``min_shard_last`` additionally drops a split of the LAST (contiguous)
+    dim that would leave shards smaller than that many elements — leading
+    dims shard at whole-row granularity and keep vector lanes stable, so
+    only the minor-most dim needs the floor."""
     clean = []
-    for dim, ax in zip(shape, axes):
-        clean.append(ax if (ax and _fits(dim, mesh, ax)) else None)
+    last = len(shape) - 1
+    for i, (dim, ax) in enumerate(zip(shape, axes)):
+        ms = min_shard_last if i == last else 1
+        clean.append(ax if (ax and _fits(dim, mesh, ax, ms)) else None)
     return P(*clean)
 
 
@@ -54,38 +91,60 @@ def _path_str(path) -> str:
 
 # ---------------------------------------------------------------- params
 
-def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool) -> P:
+#: kernel-operand base ranks (no stacked lead dims); the leading operand
+#: dim is always the output-column-tile axis ``nc`` (CSC-of-tiles layout)
+_SME_OPERAND_RANK = {"codes": 4, "sign": 4, "packed": 4,
+                     "rowscale": 3, "rowid": 2, "nnz": 1}
+
+
+def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool,
+                exact: bool = False) -> P:
     nd = len(shape)
     d = "data" if fsdp else None
-    lead = max(0, 0)
+    ms = EXACT_MIN_SHARD if exact else 1
 
     def pad(spec_axes):
         """prepend Nones for stacked superblock leading dims."""
         extra = nd - len(spec_axes)
-        return _spec(mesh, shape, *([None] * extra + list(spec_axes)))
+        return _spec(mesh, shape, *([None] * extra + list(spec_axes)),
+                     min_shard_last=ms)
 
     name = path.split("/")[-1]
     parent = path.split("/")[-2] if "/" in path else ""
 
-    # SME packed leaves: shard the tile-internal dims (always 128, so any
-    # mesh divides); tile-count dims (nr/nc) rarely divide the axis sizes.
+    # SME packed leaves: the only 'model'-sharded dims are output-feature
+    # dims (tc = in-tile columns, N = output features) so the bit-slice
+    # splice of one output column always completes inside one shard; row /
+    # contraction dims at most FSDP-shard over 'data' (storage only).
     if name == "sme_codes":                 # [..., nr, nc, tr, tc]
         return pad([None, d, None, "model"])
     if name == "sme_rowexp":                # [..., nr, nc, tr]
-        return pad([None, d, "model"])
+        return pad([None, d, None])
     if name == "sme_sign":                  # [..., K, ceil(N/8)]
-        return pad(["model", d])
+        return pad([d, "model"])
     if name == "sme_scale":                 # [..., 1, N]
         return pad([None, "model"])
+    if name == "sme_perm":                  # [..., K] row permutation
+        return P(*([None] * nd))            # index leaf: replicate
+    if name.startswith("sme_v1_") or name.startswith("sme_v2_"):
+        # kernel CSC operand trees: shard the column-tile axis ``nc`` so
+        # each shard owns whole output-column tiles (per-column nnz/rowid
+        # index slices travel with their payload); replicated when nc does
+        # not divide the model axis.
+        op = name.split("_", 2)[2]
+        base = _SME_OPERAND_RANK.get(op)
+        if base is None or nd < base:
+            return P(*([None] * nd))
+        return pad(["model"] + [None] * (base - 1))
     if "embed" in path:
         return pad(["model", d])
     if "lm_head" in path or "patch_proj" in path:
         return pad([d, "model"])
     if parent in ("router",):
         return pad([None, None])
-    # MoE experts [E, D, F] / [E, F, D]
-    if parent == "" and name in ("wi", "wg", "wo") and nd >= 3:
-        pass
+    # MoE experts [E, D, F] / [E, F, D]: expert-parallel when E divides
+    # (exact: the combine is a gather + local top-k sum, not a collective
+    # float reduction), else expert-TP over the feature dim
     if name in ("wi", "wg") and nd >= 3 and "shared" not in path:
         e = shape[-3]
         if e % axis_size(mesh, "model") == 0:
@@ -95,13 +154,18 @@ def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool) -> P:
         e = shape[-3]
         if e % axis_size(mesh, "model") == 0:
             return pad(["model", None, d])
+        if exact:                                      # D = output features
+            return pad([None, None, "model"])
         return pad([None, "model", d])
     # attention / mlp 2-D mats
     if name == "w" or name in ("wi", "wg", "wo"):
         if parent in ("o", "wo", "out_proj", "down", "dt_w", "ff_wo") or name == "wo":
-            return pad(["model", d])
+            # throughput: Megatron row-parallel (contraction over 'model',
+            # partial-sum all-reduce); exact: column-parallel like every
+            # other weight — the all-reduce would reassociate float sums
+            return pad([None, "model"]) if exact else pad(["model", d])
         if parent in ("x_proj",):
-            return pad(["model", None])
+            return pad([None, "model"]) if exact else pad(["model", None])
         if nd >= 2:
             return pad([d, "model"])
     if name == "b" and parent in ("q", "k", "v", "o", "wi", "wo", "up", "wx"):
@@ -113,22 +177,34 @@ def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool) -> P:
     if name in ("conv_b", "dt_bias", "D", "norm_w"):
         return pad(["model"])
     if parent in ("ig", "fg"):
+        if exact:                                      # NH = output features
+            return pad([None, "model"]) if nd >= 2 else pad([None])
         return pad(["model", None]) if nd >= 2 else pad([None])
     if name in ("q", "k", "v") and nd >= 3:            # mlstm block-diag [NH,dh,dh]
-        return pad([None, None, "model"])
+        # exact: dh feeds the q.k contraction downstream — replicate the
+        # small per-head mats rather than risk a sharded contraction
+        return pad([None] * nd) if exact else pad([None, None, "model"])
     if name == "r":                                    # slstm recurrence
         return pad([None] * nd)
     return P(*([None] * nd))                           # norms & misc: replicate
 
 
 def param_sharding(mesh: Mesh, abstract_params, fsdp: bool = True,
-                   tp: bool = True):
+                   tp: bool = True, exact: bool = False):
     """Tree of NamedShardings matching an abstract param tree.
 
     ``tp=False`` drops the 'model' axis from every param spec (pure-DP mode
-    for small models: params replicated over model, FSDP over data)."""
+    for small models: params replicated over model, FSDP over data).
+
+    ``exact=True`` is the serving posture (DESIGN.md §7): only
+    output-feature dims shard over 'model' and FSDP is disabled, so no
+    float contraction is ever split across devices — results are
+    bit-identical to a 1x1 mesh on any mesh shape."""
+    if exact:
+        fsdp = False
     def one(path, leaf):
-        spec = _param_spec(mesh, _path_str(path), leaf.shape, fsdp)
+        spec = _param_spec(mesh, _path_str(path), leaf.shape, fsdp,
+                           exact=exact)
         if not tp:
             spec = P(*[None if ax == "model" else
                        (tuple(a for a in ax if a != "model") or None)
@@ -139,7 +215,8 @@ def param_sharding(mesh: Mesh, abstract_params, fsdp: bool = True,
 
 # ---------------------------------------------------------------- caches
 
-def _cache_spec(mesh: Mesh, path: str, shape, batch: int) -> P:
+def _cache_spec(mesh: Mesh, path: str, shape, batch: int,
+                exact: bool = False) -> P:
     nd = len(shape)
     dp = dp_axes(mesh)
     dpn = int(np.prod([axis_size(mesh, a) for a in dp]))
@@ -147,17 +224,23 @@ def _cache_spec(mesh: Mesh, path: str, shape, batch: int) -> P:
         "data" if batch % axis_size(mesh, "data") == 0 else None)
     # SP-decode: sequence dim of attention caches shards over 'model'
     # (uniform for all head counts); batch==1 adds 'data' to the seq shard.
-    sp: Any = ("model",) if batch_ax is not None else (
-        ("data", "model") if batch == 1 else ("model",))
+    # exact mode never seq-shards: attention softmax-sums over the sequence
+    # and a sharded sum reassociates — heads/channels shard instead
+    # (slot rows stay whole, reductions stay local; DESIGN.md §7).
+    sp: Any = None if exact else (
+        ("model",) if batch_ax is not None else (
+            ("data", "model") if batch == 1 else ("model",)))
     name = path.split("/")[-1]
+    ms = EXACT_MIN_SHARD if exact else 1
 
     def pad(axes_from_right):
         """axes_from_right aligns to the trailing dims; lead dims None."""
         extra = nd - len(axes_from_right)
-        return _spec(mesh, shape, *([None] * extra + list(axes_from_right)))
+        return _spec(mesh, shape, *([None] * extra + list(axes_from_right)),
+                     min_shard_last=ms)
 
     if name in ("k", "v") and nd >= 4:                  # [..., B, S|W, KV, hd]
-        return pad([batch_ax, sp, None, None])
+        return pad([batch_ax, sp, "model" if exact else None, None])
     if name in ("c", "k_pe"):                           # MLA [..., B, S, lora]
         return pad([batch_ax, sp, None])
     if name == "conv":                                  # mamba [..., B, k-1, d_in]
@@ -166,18 +249,25 @@ def _cache_spec(mesh: Mesh, path: str, shape, batch: int) -> P:
         return pad([batch_ax, "model", None])
     # tuple states (mlstm C/n/m, slstm c/n/h/m) — shape-based
     if nd >= 4 and shape[-1] == shape[-2]:              # mlstm C [..,B,NH,dh,dv]
-        dh_ax = "data" if batch_ax is None else None    # batch==1: dh over data
+        dh_ax = ("data" if batch_ax is None and not exact
+                 else None)                             # batch==1: dh over data
         return pad([batch_ax, None, dh_ax, "model"])
     if nd >= 3:                                         # mlstm n [..,B,NH,dh]
-        return pad([batch_ax, None, "model"])
+        # exact: dh is contracted by the decode denominator — shard NH
+        return pad([batch_ax, "model", None] if exact
+                   else [batch_ax, None, "model"])
     if nd == 2:                                         # slstm [B, D] or m [B,NH]
-        return pad([batch_ax, "model"])
+        # exact: the block-diagonal recurrence contracts within dh slices
+        # of D — replicate the small 2-D states rather than risk a split
+        return pad([batch_ax, None] if exact else [batch_ax, "model"])
     return P(*([None] * nd))
 
 
-def cache_sharding(mesh: Mesh, abstract_cache, batch: int):
+def cache_sharding(mesh: Mesh, abstract_cache, batch: int,
+                   exact: bool = False):
     def one(path, leaf):
-        spec = _cache_spec(mesh, _path_str(path), leaf.shape, batch)
+        spec = _cache_spec(mesh, _path_str(path), leaf.shape, batch,
+                           exact=exact)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(one, abstract_cache)
 
@@ -207,6 +297,27 @@ def batch_sharding(mesh: Mesh, abstract_batch, include_model: bool = False):
 
 def replicated(mesh: Mesh, tree):
     return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)
+
+
+def leaf_sharding(mesh: Mesh, path: str, shape, *, fsdp: bool = False,
+                  exact: bool = True) -> NamedSharding:
+    """NamedSharding for one param leaf addressed by its '/'-joined path.
+
+    The flat-key entry point for loaders that stream leaves one at a time
+    (the ``.smez`` artifact store): each leaf can be ``jax.device_put``
+    straight into its target shards without ever assembling a
+    host-replicated tree."""
+    return NamedSharding(mesh, _param_spec(mesh, path, tuple(shape), fsdp,
+                                           exact=exact))
+
+
+def place_tree(tree, shardings):
+    """Per-leaf ``device_put`` of ``tree`` onto a matching sharding tree.
+
+    Leaves already committed with the right sharding pass through
+    untouched; host (numpy / memory-mapped) leaves are sliced directly
+    into their device shards — no intermediate replicated copy."""
+    return jax.tree.map(jax.device_put, tree, shardings)
 
 
 def tree_shardings(mesh: Mesh, *, params=None, cache=None, batch=None,

@@ -1,27 +1,35 @@
-"""Batched serving engine: slot-based continuous batching over one model.
+"""Batched serving engine: mesh-native slot-based continuous batching.
 
 Real-system behaviors covered at small scale:
 
 * fixed decode batch of ``slots`` sequences, each with its own cache region
   (caches are batched pytrees; a slot joins by writing its prefill cache in
   and leaves by being marked free — no reshapes/recompiles);
+* **mesh-native end to end** (DESIGN.md §7): the engine always runs on a
+  device mesh — single-device is the degenerate 1x1 mesh through the same
+  code path.  Params (dense and SME-packed, every backend) are placed
+  per-leaf with ``parallel.sharding.param_sharding(exact=True)``; slot
+  caches stay device-resident under ``cache_sharding(exact=True)``;
+  prefill/decode are jitted programs with explicit in/out shardings, so
+  outputs are bit-identical across mesh shapes (only output-feature /
+  head / batch dims ever shard — no float reduction crosses devices);
 * prefill and decode are separate jitted programs (the standard
-  prefill/decode split);
-* **ragged decode in one call**: ``decode_step(params, token, caches, pos,
-  active)`` takes the per-slot position vector ``pos`` ([slots] int32) and
-  the ``active`` mask ([slots] bool), so every engine step is exactly one
-  jitted decode regardless of how ragged the slots' positions are — each
-  row writes only its own cache region and free slots write nothing
-  (DESIGN.md §6);
-* per-request temperature sampling (greedy iff ``temperature == 0``),
-  per-request max_new_tokens and eos.
-
-The multi-pod serve launcher (`launch/serve.py`) wires the same engine
-through pjit with the dry-run's shardings; here it runs on whatever
-devices exist (CPU tests use smoke configs).
+  prefill/decode split).  **Prefill is batched per admission window**: all
+  requests admitted in one drain window share a single right-padded
+  prefill call (per-row ``plen`` keeps it bit-identical per request);
+  prompt lengths are bucketed to powers of two so admission windows reuse
+  compiled programs;
+* **ragged decode in one call**: every engine step is exactly one jitted
+  decode regardless of how ragged the slots' positions are (DESIGN.md §6).
+  Sampling (per-row temperature, greedy iff 0) runs *inside* the decode
+  program, so each step transfers ``[B]`` token ids to host, not
+  ``[B, V]`` logits; the decode program donates the cache argument, so
+  per-step KV updates never double-buffer the cache;
+* per-request temperature sampling, per-request max_new_tokens and eos.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -29,6 +37,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["Request", "ServeEngine", "PromptTooLong"]
 
@@ -48,63 +57,173 @@ class Request:
     done: bool = False
 
 
+def _prompt_bucket(n: int, s_max: int) -> int:
+    """Padded prefill length for a max prompt length ``n``: the next power
+    of two (>= 8), clamped to the cache ring.  Bucketing keeps the number
+    of compiled prefill programs logarithmic in prompt length; it does not
+    affect results — every length-sensitive computation (caches, recurrent
+    states, logits position, MoE capacity thresholds) keys off the per-row
+    ``plen``, never the padded length (DESIGN.md §7)."""
+    b = 1 << max(3, (max(n, 1) - 1).bit_length())
+    return min(b, s_max)
+
+
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
-                 seed: int = 0, backend: Optional[str] = None):
+                 seed: int = 0, backend: Optional[str] = None, mesh=None):
         """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
         | "auto") for packed weights: every jitted prefill/decode call runs
         under ``core.backend.use_backend``, so serving goes through the
         Pallas block-sparse kernels on TPU (interpret-mode elsewhere)
-        without touching model code.  None keeps the process default."""
+        without touching model code.  None keeps the process default.
+
+        ``mesh`` is a jax Mesh with ("data", "model") axes; None builds the
+        degenerate 1x1 mesh — there is no unsharded code path."""
+        from repro.parallel.policy import policy_for
+        from repro.parallel.sharding import (cache_sharding, param_sharding,
+                                             place_tree)
         self.api = api
-        self.params = params
         self.slots = slots
         self.s_max = s_max
         self.backend = backend
         self.plan = None          # CompilePlan when booted from_artifact
         self.cfg = api.cfg
         self.key = jax.random.key(seed)
-        # batched caches for all slots
-        self.caches = api.init_cache(batch=slots, s_max=s_max)
+        self.mesh = mesh if mesh is not None else jax.make_mesh(
+            (1, 1), ("data", "model"))
+        self.policy = dataclasses.replace(
+            policy_for(self.mesh, self.cfg, "decode"), exact=True)
+        self._rep = NamedSharding(self.mesh, P())
+
+        # per-leaf placement straight into the exact-numerics shards:
+        # host (numpy / mmap) leaves are sliced to their devices without an
+        # intermediate replicated copy; committed leaves pass through
+        self.param_sh = param_sharding(self.mesh, params, exact=True)
+        self.params = place_tree(params, self.param_sh)
+
+        # batched caches for all slots, resident under cache_sharding
+        acache = api.abstract_cache(batch=slots, s_max=s_max)
+        self.cache_sh = cache_sharding(self.mesh, acache, slots, exact=True)
+        self.caches = jax.jit(
+            lambda: api.init_cache(batch=slots, s_max=s_max),
+            out_shardings=self.cache_sh)()
+        # the batch dim of every cache leaf, found structurally (batch=1
+        # vs batch=2 abstract shapes) — slot writes index it dynamically
+        a1 = api.abstract_cache(batch=1, s_max=s_max)
+        a2 = api.abstract_cache(batch=2, s_max=s_max)
+        self._cache_bdim = jax.tree.map(
+            lambda l1, l2: next(d for d in range(l1.ndim)
+                                if l1.shape[d] != l2.shape[d]), a1, a2)
+
         self.pos = np.zeros(slots, dtype=np.int32)      # next position per slot
         self.active: List[Optional[Request]] = [None] * slots
         self.last_token = np.zeros((slots, 1), dtype=np.int32)
 
-        self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, b, s_max=s_max))
-        self._decode = jax.jit(api.decode_step)
-        self._stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        # ragged (one padded call per admission window) prefill needs the
+        # per-row plen contract; the enc-dec family prefills per request
+        # (its cross-attention over padded frames is not length-masked)
+        self._ragged_prefill = not self.cfg.n_enc_layers
+
+        # prefill outputs replicate: the window cache is transient (one
+        # slot write later it is gone) and the logits feed host sampling;
+        # pinning them replicated keeps the slot-write program's input
+        # contract independent of GSPMD layout choices
+        if self._ragged_prefill:
+            def prefill_fn(p, batch, plen):
+                return api.prefill(p, batch, s_max=s_max, plen=plen)
+            self._prefill = jax.jit(
+                prefill_fn, in_shardings=(self.param_sh, self._rep,
+                                          self._rep),
+                out_shardings=(self._rep, self._rep))
+        else:
+            def prefill_fn(p, batch):
+                return api.prefill(p, batch, s_max=s_max)
+            self._prefill = jax.jit(
+                prefill_fn, in_shardings=(self.param_sh, self._rep),
+                out_shardings=(self._rep, self._rep))
+
+        def decode_fn(p, token, caches, pos, active, temps, key):
+            logits, newc = api.decode_step(p, token, caches, pos, active)
+            l = logits if logits.ndim == 2 else logits[:, -1]
+            greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
+            drawn = jax.random.categorical(
+                key, l.astype(jnp.float32)
+                / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
+            toks = jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+            return toks, newc
+
+        self._decode = jax.jit(
+            decode_fn,
+            in_shardings=(self.param_sh, self._rep, self.cache_sh,
+                          self._rep, self._rep, self._rep, self._rep),
+            out_shardings=(self._rep, self.cache_sh),
+            donate_argnums=(2,))
+
+        def write_fn(full, pre, row, slot):
+            def one(f, p, bd):
+                src = jax.lax.dynamic_slice_in_dim(p, row, 1, axis=bd)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    f, src.astype(f.dtype), slot, axis=bd)
+            return jax.tree.map(one, full, pre, self._cache_bdim)
+
+        # row/slot are traced scalars: one compile per prefill shape, not
+        # per slot; donating the engine cache avoids an admission-time copy
+        self._write = jax.jit(
+            write_fn, in_shardings=(self.cache_sh, self._rep, self._rep,
+                                    self._rep),
+            out_shardings=self.cache_sh, donate_argnums=(0,))
+        self._stats = {"prefills": 0, "prefill_reqs": 0, "decode_steps": 0,
+                       "tokens": 0}
 
     @classmethod
-    def from_artifact(cls, api, path, *, verify: bool = False, **kw):
+    def from_artifact(cls, api, path, *, verify: bool = False, mesh=None,
+                      **kw):
         """Boot from a compiled ``.smez`` artifact (DESIGN.md §4).
 
         The artifact already holds the packed codes and kernel-ready CSC
-        operands, so there is no per-boot quantize/pack work — leaves are
-        memory-mapped straight off disk and committed to device on first
-        use.  ``backend`` defaults to the artifact's recorded serve
-        backend (manifest ``extra.serve_backend``) when present.  If a
-        kernel backend is requested but the artifact was compiled without
-        its operands, they are packed once here at boot — inside the
-        jitted programs the codes are traced and ``sme_apply`` would
-        silently fall back to xla instead.
+        operands, so there is no per-boot quantize/pack work.  On a mesh,
+        every leaf is ``device_put`` **at load time** straight into its
+        target shards (``parallel.sharding.leaf_sharding`` from the
+        manifest key) — the memory-mapped payload is sliced per device and
+        a full host-replicated param copy never exists.  ``backend``
+        defaults to the artifact's recorded serve backend (manifest
+        ``extra.serve_backend``) when present.  If a kernel backend is
+        requested but the artifact was compiled without its operands, they
+        are packed once here at boot — inside the jitted programs the
+        codes are traced and ``sme_apply`` would silently fall back to xla
+        instead.
         """
         from repro.compiler.artifact import load_artifact
         from repro.core.backend import ensure_operands
-        params, plan, manifest = load_artifact(path, verify=verify)
+        place = None
+        if mesh is not None:
+            from repro.parallel.sharding import leaf_sharding
+
+            def place(path_key, arr):
+                return jax.device_put(
+                    arr, leaf_sharding(mesh, path_key, arr.shape))
+        params, plan, manifest = load_artifact(path, verify=verify,
+                                               place=place)
         kw.setdefault("backend",
                       manifest.get("extra", {}).get("serve_backend"))
         if kw.get("backend") in ("v1", "v2"):
-            params = ensure_operands(params, kw["backend"])
-        eng = cls(api, params, **kw)
+            params = ensure_operands(params, kw["backend"], place=place)
+        eng = cls(api, params, mesh=mesh, **kw)
         eng.plan = plan
         return eng
 
-    def _backend_scope(self):
-        """SME backend context for jitted model calls (trace-time capture:
-        the choice binds on each program's first call)."""
+    def _scope(self):
+        """Trace-time context for the jitted programs: the SME backend
+        choice, the engine's ShardPolicy (activation constraints + the
+        sme_apply output-feature constraint) and the mesh (so
+        PartitionSpec-based constraints resolve)."""
         from repro.core.backend import use_backend
-        return use_backend(self.backend)
+        from repro.parallel.policy import use_policy
+        stack = contextlib.ExitStack()
+        stack.enter_context(use_backend(self.backend))
+        stack.enter_context(use_policy(self.policy))
+        stack.enter_context(self.mesh)
+        return stack
 
     # ---------------------------------------------------------------- slots
     def _free_slot(self) -> Optional[int]:
@@ -113,11 +232,13 @@ class ServeEngine:
                 return i
         return None
 
-    def add_request(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot. Returns False when no slot is
-        free; raises PromptTooLong when the prompt cannot fit the cache
-        ring. A request whose prefill-sampled token already satisfies
-        eos/max_new_tokens completes immediately without taking a slot."""
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _prefill_len(self, req: Request) -> int:
+        """Validated prefill length (prompt + frontend tokens); raises
+        PromptTooLong when the first decoded token could not fit the
+        cache ring."""
         plen = len(req.prompt) + (self.cfg.n_frontend_tokens
                                   if self.cfg.frontend else 0)
         if plen >= self.s_max:
@@ -128,53 +249,93 @@ class ServeEngine:
                 f"({len(req.prompt)} prompt tokens{front}) must be "
                 f"< s_max={self.s_max} — the first decoded token would "
                 f"overflow the cache ring; raise s_max or shorten the prompt")
-        slot = self._free_slot()
-        if slot is None:
+        return plen
+
+    def add_request(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot. Returns False when no slot is
+        free; raises PromptTooLong when the prompt cannot fit the cache
+        ring. A request whose prefill-sampled token already satisfies
+        eos/max_new_tokens completes immediately without taking a slot."""
+        self._prefill_len(req)
+        if self._free_slot() is None:
             return False
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        batch = {"tokens": toks}
+        self._admit([req])
+        return True
+
+    def _admit(self, reqs: List[Request]) -> None:
+        """One padded prefill call for a whole admission window.
+
+        Prompts are right-padded to a shared bucketed length; the per-row
+        ``plen`` vector keeps each row bit-identical to an unpadded
+        prefill of that request alone (DESIGN.md §7).  Requests whose
+        prefill-sampled token already satisfies eos/max_new_tokens
+        complete without taking a slot.  Callers must have validated
+        lengths (``_prefill_len``) and free-slot counts."""
+        assert reqs and len(reqs) <= len(self._free_slots())
+        plens = np.array([self._prefill_len(r) for r in reqs], np.int32)
+        tok_lens = [len(r.prompt) for r in reqs]
+        b = len(reqs)
+        if self._ragged_prefill:
+            pad_to = _prompt_bucket(max(tok_lens), self.s_max)
+        else:
+            pad_to = max(tok_lens)          # enc-dec: one request per window
+        toks = np.zeros((b, pad_to), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :tok_lens[i]] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.frontend == "vision_stub":
             batch["patches"] = jnp.zeros(
-                (1, self.cfg.n_frontend_tokens, self.cfg.d_model), jnp.bfloat16)
+                (b, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                jnp.bfloat16)
         if self.cfg.n_enc_layers:
             batch["frames"] = jnp.zeros(
-                (1, max(len(req.prompt), 2), self.cfg.d_model), jnp.bfloat16)
-        with self._backend_scope():
-            logits, cache1 = self._prefill(self.params, batch)
+                (b, max(max(tok_lens), 2), self.cfg.d_model), jnp.bfloat16)
+        with self._scope():
+            if self._ragged_prefill:
+                logits, pre = self._prefill(self.params, batch,
+                                            jnp.asarray(plens))
+            else:
+                logits, pre = self._prefill(self.params, batch)
         self._stats["prefills"] += 1
-        tok = self._sample(logits, np.array([req.temperature], np.float32))[0]
-        req.out_tokens.append(int(tok))
-        # the prefill-sampled token can already satisfy the request
-        if (req.eos_id is not None and int(tok) == req.eos_id) or \
-                len(req.out_tokens) >= req.max_new_tokens:
-            req.done = True
-            return True
-        # copy the single-sequence cache into the slot of the batched cache
-        self.caches = jax.tree.map(
-            lambda full, one: _slot_write(full, one, slot),
-            self.caches, cache1)
-        self.pos[slot] = plen
-        self.last_token[slot, 0] = int(tok)
-        self.active[slot] = req
-        return True
+        self._stats["prefill_reqs"] += b
+        temps = np.array([r.temperature for r in reqs], np.float32)
+        first = self._sample(logits, temps)
+        for i, req in enumerate(reqs):
+            tok = int(first[i])
+            req.out_tokens.append(tok)
+            # the prefill-sampled token can already satisfy the request
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                continue
+            slot = self._free_slot()
+            self.caches = self._write(self.caches, pre,
+                                      jnp.int32(i), jnp.int32(slot))
+            self.pos[slot] = plens[i]
+            self.last_token[slot, 0] = tok
+            self.active[slot] = req
 
     # --------------------------------------------------------------- decode
     def step(self):
         """One decode step for all active slots — exactly one jitted call
         per engine step, however ragged the slot positions are: ``pos`` is
         the per-slot position vector and ``active`` masks free slots, whose
-        cache regions are structurally never written by the model."""
+        cache regions are structurally never written by the model.  The
+        program samples in-graph and returns ``[B]`` token ids; the cache
+        argument is donated (no per-step double-buffer)."""
         act = np.array([r is not None for r in self.active])
         if not act.any():
             return
-        with self._backend_scope():
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(self.last_token), self.caches,
-                jnp.asarray(self.pos), jnp.asarray(act))
-        self._stats["decode_steps"] += 1
         temps = np.array([r.temperature if r is not None else 0.0
                           for r in self.active], np.float32)
-        toks = self._sample(logits, temps)
+        self.key, sub = jax.random.split(self.key)
+        with self._scope():
+            toks, self.caches = self._decode(
+                self.params, jnp.asarray(self.last_token), self.caches,
+                jnp.asarray(self.pos), jnp.asarray(act),
+                jnp.asarray(temps), sub)
+        self._stats["decode_steps"] += 1
+        toks = np.asarray(toks)
         for i in np.flatnonzero(act):
             req = self.active[i]
             tok = int(toks[i])
@@ -195,8 +356,11 @@ class ServeEngine:
                 self.pos[i] = 0
 
     def _sample(self, logits, temperatures) -> np.ndarray:
-        """Batched sampling: greedy where ``temperatures[i] == 0``, else a
-        softmax draw at that row's temperature (one key split per call)."""
+        """Host-side batched sampling: greedy where ``temperatures[i] ==
+        0``, else a softmax draw at that row's temperature (one key split
+        per call).  The decode path samples in-graph with the same
+        semantics; this stays for prefill logits and as the reference for
+        tests."""
         l = logits if logits.ndim == 2 else logits[:, -1]
         self.key, sub = jax.random.split(self.key)
         greedy = jnp.argmax(l, axis=-1)
@@ -210,27 +374,37 @@ class ServeEngine:
         return np.asarray(jnp.where(t > 0, sampled, greedy), dtype=np.int32)
 
     def run(self, requests: List[Request], max_steps: int = 1000) -> Dict:
-        """Drive ``requests`` to completion (or ``max_steps``).  Stats split
-        ``completed`` (reached eos/max_new_tokens/cache end), ``evicted``
-        (cut off at ``max_steps`` with partial output), ``rejected``
-        (prompt cannot fit the cache — skipped, the rest of the batch keeps
-        running) and ``unserved`` (never admitted); the four always sum to
-        ``len(requests)``."""
+        """Drive ``requests`` to completion (or ``max_steps``).  Each loop
+        iteration admits every fittable pending request the free slots
+        allow — one batched prefill per drain window — then decodes one
+        step.  Stats split ``completed`` (reached eos/max_new_tokens/cache
+        end), ``evicted`` (cut off at ``max_steps`` with partial output),
+        ``rejected`` (prompt cannot fit the cache — skipped, the rest of
+        the batch keeps running) and ``unserved`` (never admitted); the
+        four always sum to ``len(requests)``."""
         t0 = time.time()
         pending = list(requests)
         n_rejected = 0
         steps = 0
         while (pending or any(self.active)) and steps < max_steps:
-            while pending and self._free_slot() is not None:
-                try:
-                    admitted = self.add_request(pending[0])
-                except PromptTooLong:
-                    pending.pop(0)
-                    n_rejected += 1
-                    continue
-                if not admitted:
+            # drain: fill every free slot, one padded prefill per window
+            # (enc-dec prefills per request); requests completed by their
+            # prefill-sampled token free their slot for the same drain
+            while pending:
+                free = len(self._free_slots())
+                cap = free if self._ragged_prefill else min(1, free)
+                window = []
+                while pending and len(window) < cap:
+                    try:
+                        self._prefill_len(pending[0])
+                    except PromptTooLong:
+                        pending.pop(0)
+                        n_rejected += 1
+                        continue
+                    window.append(pending.pop(0))
+                if not window:
                     break
-                pending.pop(0)
+                self._admit(window)
             self.step()
             steps += 1
         never_ran = len([r for r in requests
@@ -252,7 +426,10 @@ def _slot_write(full, one, slot: int):
     Handles leading stacked dims: the batch dim is the one where
     full.shape[d] == slots and one.shape[d] == 1 (first mismatch match).
     With slots == 1 no dim mismatches — the single slot IS the whole
-    batch, so the prefill leaf replaces the batched leaf outright."""
+    batch, so the prefill leaf replaces the batched leaf outright.
+
+    Kept as the eager single-leaf reference for the engine's jitted
+    ``_write`` program (tests exercise it directly)."""
     if one.shape == full.shape:
         return one.astype(full.dtype)
     for d in range(full.ndim):

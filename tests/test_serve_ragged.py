@@ -67,7 +67,9 @@ def _requests(cfg, seed=0):
 
 
 def _drive(eng, reqs):
-    """engine.run, but counting engine steps to pin decode_steps == steps."""
+    """engine.run, but counting engine steps to pin decode_steps == steps
+    and cache residency: slot caches must stay device-resident jax Arrays
+    between steps (no host round-trip of any cache leaf)."""
     pending = list(reqs)
     steps = 0
     while pending or any(r is not None for r in eng.active):
@@ -77,6 +79,9 @@ def _drive(eng, reqs):
             pending.pop(0)
         eng.step()
         steps += 1
+        assert all(isinstance(l, jax.Array)
+                   for l in jax.tree.leaves(eng.caches)), \
+            "cache leaf left the device between engine steps"
         assert steps < 200, "ragged run did not terminate"
     return steps
 
@@ -258,6 +263,84 @@ def test_prefill_token_respects_limits():
     eng3 = ServeEngine(api, params, slots=1, s_max=32)
     eng3.run([eos], max_steps=10)
     assert eos.done and eos.out_tokens == probe.out_tokens
+
+
+def test_decode_donates_cache_buffers():
+    """The jitted decode donates its cache argument: after each step the
+    previous step's cache buffers must be consumed (no per-step
+    double-buffer of the whole KV cache), the new leaves device-resident
+    under the engine's cache shardings."""
+    cfg = get_smoke("qwen1.5-0.5b")
+    api = build_model(cfg)
+    eng = ServeEngine(api, api.init_params(RNG), slots=2, s_max=32)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=8)
+    assert eng.add_request(req)
+    for _ in range(3):
+        old = jax.tree.leaves(eng.caches)
+        assert all(isinstance(l, jax.Array) for l in old)
+        eng.step()
+        assert all(l.is_deleted() for l in old), \
+            "decode did not donate the cache (old buffers still alive)"
+        for l, sh in zip(jax.tree.leaves(eng.caches),
+                         jax.tree.leaves(eng.cache_sh)):
+            assert isinstance(l, jax.Array)
+            assert l.sharding.is_equivalent_to(sh, l.ndim)
+
+
+def test_batched_prefill_window():
+    """All requests admitted in one drain window share a single padded
+    prefill call; the tokens still match the one-request-per-call path."""
+    cfg = get_smoke("qwen1.5-0.5b")
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+
+    reqs_a = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                      max_new_tokens=3) for i in range(3)]
+    eng_a = ServeEngine(api, params, slots=3, s_max=32)
+    stats = eng_a.run(reqs_a, max_steps=40)
+    assert stats["prefills"] == 1, \
+        f"drain window of 3 must prefill once, got {stats['prefills']}"
+    assert stats["prefill_reqs"] == 3
+
+    # reference: one add_request (one prefill) per request
+    reqs_b = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                      max_new_tokens=3) for i in range(3)]
+    eng_b = ServeEngine(api, params, slots=3, s_max=32)
+    for r in reqs_b:
+        assert eng_b.add_request(r)
+    while any(x is not None for x in eng_b.active):
+        eng_b.step()
+    assert eng_b._stats["prefills"] == 3
+    assert [r.out_tokens for r in reqs_a] == [r.out_tokens for r in reqs_b]
+
+
+def test_moe_capacity_invariant_to_prompt_bucket():
+    """Ragged==solo must survive *mixed buckets*: a short prompt admitted
+    in a window with a long one pads to a bigger bucket, which must not
+    change its MoE capacity-drop decisions (the threshold keys off the
+    per-row valid length, not the padded length)."""
+    cfg = get_smoke("mixtral-8x7b")
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    rng = np.random.default_rng(3)
+    lens = (4, 20)                      # buckets 8 vs 32
+    mk = lambda: [Request(rid=i,
+                          prompt=rng2.integers(0, cfg.vocab, size=lens[i],
+                                               dtype=np.int32),
+                          max_new_tokens=4) for i in range(2)]
+    rng2 = np.random.default_rng(3)
+    ragged = mk()
+    eng = ServeEngine(api, params, slots=2, s_max=48)
+    eng.run(ragged, max_steps=60)
+    assert all(r.done for r in ragged)
+    rng2 = np.random.default_rng(3)
+    for ref in mk():
+        solo = ServeEngine(api, params, slots=2, s_max=48)
+        solo.run([ref], max_steps=60)
+        assert ragged[ref.rid].out_tokens == ref.out_tokens, (
+            f"bucket-dependent MoE capacity broke request {ref.rid}: "
+            f"ragged={ragged[ref.rid].out_tokens} solo={ref.out_tokens}")
 
 
 def test_run_stats_split_completed_evicted():
