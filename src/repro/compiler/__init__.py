@@ -21,6 +21,7 @@ from .plan import (
 from .reorder import (
     plan_row_permutation, permutation_from_codes, permutation_gain,
     occupied_tile_count, row_block_signature,
+    row_plane_signature, plane_permutation_gain, occupied_plane_tile_count,
 )
 from .artifact import (
     FORMAT_VERSION, save_artifact, load_artifact, read_manifest,
@@ -32,6 +33,8 @@ __all__ = [
     "DEFAULT_CANDIDATES", "candidate_error_bound",
     "plan_row_permutation", "permutation_from_codes", "permutation_gain",
     "occupied_tile_count", "row_block_signature",
+    "row_plane_signature", "plane_permutation_gain",
+    "occupied_plane_tile_count",
     "FORMAT_VERSION", "save_artifact", "load_artifact", "read_manifest",
     "verify_artifact", "compile_model",
 ]

@@ -41,7 +41,16 @@ from .plan import CompilePlan, plan_model
 __all__ = ["FORMAT_VERSION", "save_artifact", "load_artifact",
            "read_manifest", "verify_artifact", "compile_model"]
 
-FORMAT_VERSION = 1
+#: 1 — tile-CSC only: sme_codes/rowexp/sign/scale/meta (+ sme_v1_*/v2_*
+#:     operands, sme_perm).
+#: 2 — plane-CSC leaves: ``sme_tilesq`` per-tile squeeze depths and the
+#:     ``sme_v3_*`` operand set; plan version 2 (squeeze_max /
+#:     reorder_level / occupied_plane_tiles per layer).
+#: Readers refuse artifacts *newer* than they understand and accept
+#: equal-or-older ones: a version-1 artifact loads as tile-CSC only
+#: (``smeweight_from_param`` defaults the absent per-tile depths to the
+#: global ``sme_squeezed``).
+FORMAT_VERSION = 2
 
 
 # --------------------------------------------------------------- tree codec

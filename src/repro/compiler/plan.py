@@ -39,15 +39,29 @@ from repro.core.squeeze import squeeze_error_bound
 __all__ = ["Candidate", "LayerPlan", "CompilePlan", "plan_model",
            "DEFAULT_CANDIDATES", "candidate_error_bound"]
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 
-#: (n_bits, window, squeeze) grid searched per layer.  All stay within the
-#: uint8 code dtype; squeeze>=1 / window<=3 rows are minifloat-6 (v2)
-#: eligible, the rest serve through v1/xla.
-DEFAULT_CANDIDATES: Tuple[Tuple[int, int, int], ...] = (
+#: (n_bits, window, squeeze[, squeeze_max]) grid searched per layer.  All
+#: stay within the uint8 code dtype; squeeze>=1 / window<=3 rows are
+#: minifloat-6 (v2) eligible, the rest serve through v1/xla.  4-tuples add
+#: per-tile squeeze depth (free deepening up to squeeze_max — exact, so
+#: the candidate's error equals its 3-tuple sibling's; it is a distinct
+#: candidate because the plane-CSC byte count differs).
+DEFAULT_CANDIDATES: Tuple[Tuple[int, ...], ...] = (
     (8, 3, 0), (8, 3, 1), (8, 3, 2), (8, 2, 1), (8, 2, 2), (8, 2, 3),
     (6, 3, 1), (6, 2, 2),
+    (8, 3, 1, 7), (8, 2, 1, 7), (6, 3, 1, 5),
 )
+
+
+def _norm_candidate(c) -> Tuple[int, int, int, int]:
+    """(n_bits, window, squeeze[, squeeze_max]) -> 4-tuple (0 = global)."""
+    nb, win, sq = c[0], c[1], c[2]
+    sq_max = c[3] if len(c) > 3 else 0
+    if sq_max and not sq <= sq_max < nb:
+        raise ValueError(f"candidate {c}: squeeze_max must be in "
+                         f"[squeeze, n_bits)")
+    return nb, win, sq, sq_max
 
 
 def candidate_error_bound(n_bits: int, window: int, squeeze: int) -> float:
@@ -74,6 +88,9 @@ class Candidate:
     backend: Optional[str]         # operand set this setting serves through
     tiles: int = 0                 # occupied 128x128 tiles (CSC entries)
     reorder_gain: int = 0          # occupied tiles freed by row reordering
+    squeeze_max: int = 0           # per-tile free-deepening cap (0 = global)
+    plane_tiles: int = 0           # occupied (plane, tile) pairs (v3 units)
+    plane_reorder_gain: int = 0    # plane-tiles freed by plane-level reorder
 
 
 @dataclasses.dataclass
@@ -86,7 +103,7 @@ class LayerPlan:
     n_bits: int = 8
     window: int = 3
     squeeze: int = 1
-    backend: Optional[str] = None  # "v1" | "v2" | None (no operands)
+    backend: Optional[str] = None  # "v1" | "v2" | "v3" | None (no operands)
     reorder: bool = False
     # stats of the chosen candidate (per 2-D slice)
     error_bound: float = 0.0
@@ -96,6 +113,9 @@ class LayerPlan:
     occupied_tiles: int = 0        # CSC entries before reordering
     occupied_tiles_reordered: int = 0   # after (== occupied_tiles if not)
     total_tiles: int = 0
+    squeeze_max: int = 0           # per-tile squeeze cap (0 = global only)
+    reorder_level: str = "tile"    # signature the permutation clusters on
+    occupied_plane_tiles: int = 0  # plane-CSC entries (v3 DMA units)
 
     @property
     def n_weights(self) -> int:
@@ -181,55 +201,67 @@ class CompilePlan:
 # candidate evaluation
 # --------------------------------------------------------------------------
 def _pick_backend(backend: Optional[str], n_bits: int, window: int,
-                  squeeze: int) -> Optional[str]:
-    """Which operand set a setting serves through."""
+                  squeeze: int, smew=None) -> Optional[str]:
+    """Which operand set a setting serves through.
+
+    ``auto`` with a trial-compressed ``smew`` prices the actual occupancy:
+    v3 (plane-CSC) wins whenever its measured bytes/weight undercut the
+    eligible tile-CSC formats — per-plane occupancy is exactly what the
+    trial knows and the analytic path cannot.
+    """
     if backend in (None, "xla"):
         return None
     from repro.core.backend import SpmmV2Backend
     v2_ok = SpmmV2Backend.supports_settings(n_bits, window, squeeze)
     if backend == "auto":
-        return "v2" if v2_ok else "v1"
+        best = "v2" if v2_ok else "v1"
+        if smew is not None:
+            by_bytes = {"v1": _storage_bytes_per_weight(smew, "v1"),
+                        "v3": _storage_bytes_per_weight(smew, "v3")}
+            if v2_ok:
+                by_bytes["v2"] = _storage_bytes_per_weight(smew, "v2")
+            best = min(by_bytes, key=by_bytes.get)
+        return best
     if backend == "v2" and not v2_ok:
         return "v1"
     return backend
 
 
 def _storage_bytes_per_weight(smew, backend: Optional[str]) -> float:
-    if backend == "v2":
-        # minifloat-6 payload: 0.75 B/code on occupied tiles + metadata
-        tr, tc = smew.tile
-        occ = int(smew.occupancy.sum())
-        payload = occ * tr * tc * 6
-        meta = occ * (tr * 8 + 32)
-        return (payload + meta) / smew.n_weights / 8
-    fmt = "bytecode" if backend == "v1" else "planes"
+    fmt = {"v1": "bytecode", "v2": "minifloat6", "v3": "plane_csc"}.get(
+        backend, "planes")
     return smew.storage_bits_per_weight(fmt) / 8
 
 
 def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
-                    tile, backend: Optional[str],
-                    reorder_gain: int = 0) -> Candidate:
+                    tile, backend: Optional[str], reorder_gain: int = 0,
+                    squeeze_max: int = 0,
+                    plane_reorder_gain: int = 0) -> Candidate:
     from repro.core.sme import sme_compress
     smew = sme_compress(w2d, n_bits=n_bits, window=window, squeeze=squeeze,
-                        tile=tile)
+                        tile=tile, squeeze_max=squeeze_max or None)
     # relative Frobenius dequant error: an accuracy proxy on the same scale
     # across layers regardless of their magnitude
     err = float(np.linalg.norm(smew.dequant() - w2d)
                 / max(np.linalg.norm(w2d), 1e-12))
-    be = _pick_backend(backend, n_bits, window, squeeze)
-    gain = reorder_gain
+    be = _pick_backend(backend, n_bits, window, squeeze, smew=smew)
     return Candidate(
         n_bits=n_bits, window=window, squeeze=squeeze, error=err,
         bytes_per_weight=_storage_bytes_per_weight(smew, be),
         crossbars=smew.crossbars_used(), backend=be,
-        tiles=int(smew.occupancy.sum()), reorder_gain=gain)
+        tiles=int(smew.occupancy.sum()), reorder_gain=reorder_gain,
+        squeeze_max=squeeze_max, plane_tiles=smew.plane_tiles_used(),
+        plane_reorder_gain=plane_reorder_gain)
 
 
 def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
-                       tile, backend: Optional[str]) -> Candidate:
+                       tile, backend: Optional[str],
+                       squeeze_max: int = 0) -> Candidate:
     """Shape-only evaluation (dry-run / abstract trees): occupancy unknown,
     assume all live planes occupied — a pessimistic crossbar count and an
-    exact byte count for the dense-tile worst case."""
+    exact byte count for the dense-tile worst case.  The all-planes-dense
+    assumption means v3 never wins analytically; plane-CSC pricing needs
+    the trial measure."""
     k, n = shape
     nr, nc = -(-k // tile[0]), -(-n // tile[1])
     live = n_bits - squeeze
@@ -248,7 +280,8 @@ def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
         n_bits=n_bits, window=window, squeeze=squeeze,
         error=candidate_error_bound(n_bits, window, squeeze),
         bytes_per_weight=bits / 8, crossbars=tiles * live, backend=be,
-        tiles=tiles)
+        tiles=tiles, squeeze_max=squeeze_max,
+        plane_tiles=tiles * live)
 
 
 def _candidate_cost(c: Candidate, n_weights: int, objective: str) -> float:
@@ -304,10 +337,16 @@ def plan_model(params, error_budget: float = 0.05,
     most accurate candidate unconditionally — the budget gates *upgrades*
     (cheaper, lossier settings), so a budget below the floor of the
     candidate grid degrades gracefully to the most accurate plan instead
-    of refusing to compress.  ``backend="auto"`` records the
-    operand set each chosen setting serves through (v2 when minifloat-6
-    eligible); ``reorder=True`` marks 2-D layers whose trial permutation
-    strictly frees occupied tiles.  Returns a :class:`CompilePlan`.
+    of refusing to compress.  Candidates are ``(n_bits, window, squeeze)``
+    3-tuples or ``(..., squeeze_max)`` 4-tuples (per-tile free-deepening:
+    identical error, different plane-CSC bytes).  ``backend="auto"``
+    records the operand set each chosen setting serves through, priced by
+    *measured* bytes in trial mode — v3 (plane-CSC) wherever per-plane
+    occupancy undercuts the tile-CSC formats, else v2 when minifloat-6
+    eligible, else v1; ``reorder=True`` marks 2-D layers whose trial
+    permutation strictly frees occupied units, clustered at the chosen
+    backend's skip granularity (``reorder_level``: codeword tiles, or
+    bit-planes for v3).  Returns a :class:`CompilePlan`.
 
     Stacked weights (MoE ``[E, D, F]``) are trial-measured on slice 0
     only — one setting per leaf keeps the operand arrays rectangular,
@@ -331,19 +370,29 @@ def plan_model(params, error_budget: float = 0.05,
         w = np.asarray(leaf, np.float64).reshape((-1,) + shape2d)[0] \
             if measure == "trial" else None
         gains = {}            # reorder gain depends only on (n_bits, window)
+        pgains = {}           # plane-level gain, same key
         cands = []
-        for nb, win, sq in candidates:
+        for cand in candidates:
+            nb, win, sq, sq_max = _norm_candidate(cand)
             if measure == "trial":
                 if reorder and not stacked and (nb, win) not in gains:
-                    from .reorder import permutation_gain
+                    from .reorder import (permutation_gain,
+                                          plane_permutation_gain)
                     from repro.core.quant import quantize
                     q = quantize(w, method="sme", n_bits=nb, window=win)
                     before, after = permutation_gain(q.codes, tile=tile)
                     gains[nb, win] = before - after
+                    pb, pa = plane_permutation_gain(q.codes, n_bits=nb,
+                                                    tile=tile)
+                    pgains[nb, win] = pb - pa
                 c = _evaluate_trial(w, nb, win, sq, tile, backend,
-                                    reorder_gain=gains.get((nb, win), 0))
+                                    reorder_gain=gains.get((nb, win), 0),
+                                    squeeze_max=sq_max,
+                                    plane_reorder_gain=pgains.get(
+                                        (nb, win), 0))
             else:
-                c = _evaluate_analytic(shape2d, nb, win, sq, tile, backend)
+                c = _evaluate_analytic(shape2d, nb, win, sq, tile, backend,
+                                       squeeze_max=sq_max)
             cands.append(c)
         # error/bytes frontier: drop candidates dominated on both axes
         cands.sort(key=lambda c: (c.error, c.bytes_per_weight))
@@ -404,17 +453,35 @@ def plan_model(params, error_budget: float = 0.05,
         c = frontier[choice[key]]
         shape2d, n_slices = meta[key]
         nr, nc = -(-shape2d[0] // tile[0]), -(-shape2d[1] // tile[1])
+        # a layer serving through plane-CSC reorders on the plane-level
+        # signature (its skip unit); tile-CSC layers on the codeword one
+        if c.backend == "v3":
+            level, gain = "plane", c.plane_reorder_gain
+        else:
+            level, gain = "tile", c.reorder_gain
         layers[key] = LayerPlan(
             path=key, shape=shape2d, n_slices=n_slices,
             n_bits=c.n_bits, window=c.window, squeeze=c.squeeze,
-            backend=c.backend, reorder=bool(c.reorder_gain > 0),
+            backend=c.backend, reorder=bool(gain > 0),
             error_bound=c.error, bytes_per_weight=c.bytes_per_weight,
             crossbars=c.crossbars,
             crossbars_dense=conventional_crossbar_total(shape2d, c.n_bits,
                                                         tile=tile),
             occupied_tiles=c.tiles,
-            occupied_tiles_reordered=c.tiles - max(c.reorder_gain, 0),
+            # only the permutation that actually ships may claim its gain:
+            # tile-level stats for tile-level reorders; a plane-level
+            # permutation's codeword-tile effect is unmeasured, so v3
+            # layers keep the as-laid-out tile count and report their
+            # gain in occupied_plane_tiles instead
+            occupied_tiles_reordered=c.tiles - (
+                max(c.reorder_gain, 0) if level == "tile" and gain > 0
+                else 0),
             total_tiles=nr * nc,
+            squeeze_max=c.squeeze_max,
+            reorder_level=level,
+            occupied_plane_tiles=c.plane_tiles
+            - (max(c.plane_reorder_gain, 0) if (level == "plane"
+                                                and gain > 0) else 0),
         )
     return CompilePlan(layers=layers, tile=tile, error_budget=error_budget,
                        objective=objective)

@@ -22,6 +22,17 @@ which column tiles it touches; rows sort lexicographically by signature
 helps less than the identity ordering by more than tie-breaking noise, and
 ``permutation_gain`` reports the occupied-tile delta so the planner only
 keeps permutations that actually free tiles.
+
+Two signature levels share the machinery (``level=``):
+
+  * ``"tile"``  — per (row, column-block): any non-zero *codeword* — the
+    unit the tile-CSC (v1/v2) formats skip;
+  * ``"plane"`` — per (row, column-block, bit-plane): any set *bit* — the
+    unit the plane-CSC (v3) format skips.  Bit-level clustering densifies
+    individual planes far beyond codeword clustering (arXiv:2511.14202):
+    rows whose magnitudes live in the same band share plane support, so
+    sorting by plane signature empties whole (plane, tile) pairs that
+    codeword-level sorting leaves half-full.
 """
 from __future__ import annotations
 
@@ -32,8 +43,10 @@ import numpy as np
 from repro.core.quant import quantize
 
 __all__ = [
-    "row_block_signature", "permutation_from_codes", "plan_row_permutation",
-    "occupied_tile_count", "permutation_gain",
+    "row_block_signature", "row_plane_signature", "permutation_from_codes",
+    "plan_row_permutation", "occupied_tile_count",
+    "occupied_plane_tile_count", "permutation_gain",
+    "plane_permutation_gain",
 ]
 
 
@@ -48,16 +61,43 @@ def row_block_signature(codes: np.ndarray,
     return padded.reshape(k, nc, tc).any(axis=-1)
 
 
+def row_plane_signature(codes: np.ndarray, n_bits: int = 8,
+                        tile: Tuple[int, int] = (128, 128)) -> np.ndarray:
+    """bool [K, nc * Nq]: per row and column block, which bit-planes the
+    row touches (MSB plane first within each block) — the plane-CSC
+    occupancy signature.  Refines :func:`row_block_signature`: a block's
+    plane bits are all-false exactly when its codeword bit is false."""
+    from repro.core.bitslice import bit_planes
+    k, n = codes.shape
+    tc = tile[1]
+    nc = -(-n // tc)
+    planes = bit_planes(codes, n_bits)               # [Nq, K, N] 0/1
+    padded = np.zeros((n_bits, k, nc * tc), dtype=bool)
+    padded[..., :n] = planes != 0
+    blocks = padded.reshape(n_bits, k, nc, tc).any(axis=-1)   # [Nq, K, nc]
+    return blocks.transpose(1, 2, 0).reshape(k, nc * n_bits)
+
+
 def permutation_from_codes(codes: np.ndarray,
-                           tile: Tuple[int, int] = (128, 128)) -> np.ndarray:
+                           tile: Tuple[int, int] = (128, 128),
+                           level: str = "tile",
+                           n_bits: int = 8) -> np.ndarray:
     """Row permutation that clusters rows by column-block sparsity pattern.
 
-    Lexicographic sort over the per-row block signature (primary key =
-    leftmost block, final tiebreak = occupied-block count) — rows sharing a
-    pattern land contiguously, so blocks none of them touch become whole
-    empty tiles.  Deterministic; stable within equal signatures.
+    Lexicographic sort over the per-row signature (primary key = leftmost
+    block, final tiebreak = occupied-block count) — rows sharing a pattern
+    land contiguously, so blocks none of them touch become whole empty
+    units.  ``level="tile"`` keys on codeword-block occupancy (frees
+    whole tiles for the tile-CSC formats); ``level="plane"`` keys on
+    per-plane block occupancy (frees (plane, tile) pairs for plane-CSC).
+    Deterministic; stable within equal signatures.
     """
-    sig = row_block_signature(codes, tile)
+    if level == "plane":
+        sig = row_plane_signature(codes, n_bits, tile)
+    elif level == "tile":
+        sig = row_block_signature(codes, tile)
+    else:
+        raise ValueError(f"level must be 'tile'|'plane', got {level!r}")
     # np.lexsort sorts by the LAST key first: put block 0 last (primary),
     # and the popcount first (least-significant tiebreak).
     keys = (sig.sum(axis=1),) + tuple(sig[:, j] for j in range(sig.shape[1] - 1, -1, -1))
@@ -66,7 +106,8 @@ def permutation_from_codes(codes: np.ndarray,
 
 def plan_row_permutation(w: np.ndarray, n_bits: int = 8, window: int = 3,
                          tile: Tuple[int, int] = (128, 128),
-                         method: str = "sme") -> np.ndarray:
+                         method: str = "sme",
+                         level: str = "tile") -> np.ndarray:
     """Permutation for a *real* weight matrix: quantize, then cluster codes.
 
     Quantization happens before signature extraction because the squeeze /
@@ -75,7 +116,7 @@ def plan_row_permutation(w: np.ndarray, n_bits: int = 8, window: int = 3,
     """
     q = quantize(np.asarray(w, np.float64), method=method, n_bits=n_bits,
                  window=window)
-    return permutation_from_codes(q.codes, tile)
+    return permutation_from_codes(q.codes, tile, level=level, n_bits=n_bits)
 
 
 def occupied_tile_count(codes: np.ndarray,
@@ -92,3 +133,24 @@ def permutation_gain(codes: np.ndarray, perm: Optional[np.ndarray] = None,
         perm = permutation_from_codes(codes, tile)
     return (occupied_tile_count(codes, tile),
             occupied_tile_count(codes[perm], tile))
+
+
+def occupied_plane_tile_count(codes: np.ndarray, n_bits: int = 8,
+                              tile: Tuple[int, int] = (128, 128)) -> int:
+    """Occupied (plane, tile) pairs = plane-CSC entries (v3 DMA units)."""
+    from repro.core.bitslice import tile_codes, tiled_plane_occupancy
+    return int(tiled_plane_occupancy(tile_codes(codes, tile), n_bits).sum())
+
+
+def plane_permutation_gain(codes: np.ndarray,
+                           perm: Optional[np.ndarray] = None,
+                           n_bits: int = 8,
+                           tile: Tuple[int, int] = (128, 128)
+                           ) -> Tuple[int, int]:
+    """(occupied plane-tiles before, after) applying ``perm`` (a
+    plane-level clustering is computed when None)."""
+    if perm is None:
+        perm = permutation_from_codes(codes, tile, level="plane",
+                                      n_bits=n_bits)
+    return (occupied_plane_tile_count(codes, n_bits, tile),
+            occupied_plane_tile_count(codes[perm], n_bits, tile))

@@ -9,7 +9,12 @@ linear layer live:
   * ``v1``  — the ``sme_spmm`` Pallas kernel: uint8 codewords + packed sign
     bitmap, CSC-of-tiles scalar-prefetch indexing, empty tiles skipped;
   * ``v2``  — the ``sme_spmm6`` Pallas kernel: minifloat-6 payload
-    (0.75 B/weight), same CSC skipping.
+    (0.75 B/weight), same CSC skipping;
+  * ``v3``  — the ``sme_spmm_planes`` Pallas kernel: plane-CSC payload —
+    1-bit bitmaps per occupied *(plane, tile)* pair, signs once per weight,
+    spliced in a VMEM epilogue.  Bit-identical to v1/v2; smallest HBM
+    payload whenever plane-level occupancy is sparse (pruned / reordered /
+    narrow-band layers; the compiler prices this per layer).
 
 Every backend exposes the same two operations:
 
@@ -45,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .sme import SMEWeight, csc_tile_order
+
+_TILESQ_KEY = "sme_tilesq"
 
 __all__ = [
     "SMEBackend", "register_backend", "get_backend", "available_backends",
@@ -82,6 +89,8 @@ def smeweight_from_param(param: dict, index: Tuple[int, ...] = ()) -> SMEWeight:
     row_exp = np.asarray(param["sme_rowexp"])[index]
     sign = np.asarray(param["sme_sign"])[index]
     scale = np.asarray(param["sme_scale"])[index]
+    tile_sq = (np.asarray(param[_TILESQ_KEY])[index]
+               if _TILESQ_KEY in param else None)
     k = sign.shape[-2]
     n = scale.shape[-1]
     return SMEWeight(
@@ -96,6 +105,7 @@ def smeweight_from_param(param: dict, index: Tuple[int, ...] = ()) -> SMEWeight:
         sign_packed=sign,
         scale=scale.astype(np.float64),
         occupancy=codes.any(axis=(-1, -2)),
+        tile_sq=tile_sq,
     )
 
 
@@ -121,6 +131,12 @@ class SMEBackend:
                     pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
         """SMEWeight -> numpy operand arrays (keys = ``self.OPERANDS``)."""
         raise NotImplementedError
+
+    def pad_hint(self, smew: SMEWeight) -> int:
+        """CSC list length one slice needs — stacked slices take the max so
+        operand arrays stack rectangularly.  Tile-CSC backends count
+        occupied tiles per column; plane-CSC counts (plane, tile) pairs."""
+        return max(int(smew.occupancy.sum(axis=0).max()), 1)
 
     # -- run time ----------------------------------------------------------
     def matmul2d(self, x2d: jax.Array, ops: Dict[str, jax.Array],
@@ -222,7 +238,10 @@ def resolve_backend(param: Optional[dict] = None,
     if name != "auto":
         return get_backend(name)
     if param is not None:
-        for cand in ("v2", "v1"):
+        # v2 over v3 over v1: with several operand sets present, prefer the
+        # guaranteed-smallest payload; a compiler plan that chose v3 for a
+        # layer emits only v3 operands, so auto serves it through v3
+        for cand in ("v2", "v3", "v1"):
             if cand in _REGISTRY and _REGISTRY[cand].has_operands(param):
                 return _REGISTRY[cand]
     if jax.default_backend() == "tpu":
@@ -245,7 +264,7 @@ def pack_param_operands(param: dict, backend: SMEBackend) -> Dict[str, jax.Array
         return {k: jnp.asarray(v) for k, v in ops.items()}
     idxs = list(np.ndindex(*lead))
     smews = [smeweight_from_param(param, i) for i in idxs]
-    pad_to = max(max(int(s.occupancy.sum(axis=0).max()), 1) for s in smews)
+    pad_to = max(backend.pad_hint(s) for s in smews)
     per = [backend.pack_weight(s, pad_to=pad_to) for s in smews]
     return {
         k: jnp.asarray(
@@ -448,6 +467,51 @@ class SpmmV2Backend(SMEBackend):
         return _v2_call(x2d, ops["packed"], ops["rowscale"], ops["rowid"],
                         ops["nnz"], scale, jnp.exp2(-sq),
                         n=n, bn=bn, bm=bm, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bm", "interpret"))
+def _v3_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
+             scale, qscale, *, n, bm, interpret):
+    from repro.kernels.sme_spmm.sme_spmm_planes import sme_spmm_planes
+    m, k = x2d.shape
+    bk = planes.shape[-2] * 8
+    nr = -(-k // bk)
+    mp = -(-m // bm) * bm
+    xp = jnp.zeros((mp, nr * bk), x2d.dtype).at[:m, :k].set(x2d)
+    # the spliced weight is the raw integer codeword (plane bit values
+    # 2^shift); 2^-n_bits folds into qscale exactly as in _v1_call, so the
+    # epilogue is bit-identical to v1's and meta can stay traced
+    y = sme_spmm_planes(xp, planes, sign, rowscale, rowid, shift, last,
+                        nnz, bm=bm, out_dtype=jnp.float32,
+                        interpret=interpret)
+    return y[:m, :n] * scale * qscale
+
+
+@register_backend
+class SpmmV3Backend(SMEBackend):
+    """``sme_spmm_planes`` kernel: per-(plane, tile) 1-bit bitmaps with a
+    VMEM splice epilogue — the plane-CSC format (DESIGN.md §2)."""
+
+    name = "v3"
+    OPERANDS = ("planes", "sign", "rowscale", "rowid", "shift", "last",
+                "nnz")
+
+    def pad_hint(self, smew):
+        return max(int(smew.plane_occupancy().sum(axis=(0, 1)).max()), 1)
+
+    def pack_weight(self, smew, pad_to=None):
+        return smew.pack_plane_csc(pad_to=pad_to)
+
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+        if interpret is None:
+            interpret = _default_interpret()
+        n = _param_kn(param)[1]
+        scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
+        nbits = jnp.asarray(param.get("sme_nbits", 8), jnp.float32)
+        return _v3_call(x2d, ops["planes"], ops["sign"], ops["rowscale"],
+                        ops["rowid"], ops["shift"], ops["last"], ops["nnz"],
+                        scale, jnp.exp2(-nbits),
+                        n=n, bm=bm, interpret=bool(interpret))
 
 
 # ------------------------------------------------------------------ dispatch

@@ -25,6 +25,7 @@ __all__ = [
     "TiledPlanes",
     "slice_to_tiles",
     "plane_occupancy",
+    "tiled_plane_occupancy",
     "nonempty_rows_per_tile",
 ]
 
@@ -107,6 +108,16 @@ def slice_to_tiles(
 
 def plane_occupancy(codes: np.ndarray, n_bits: int, tile=(128, 128)) -> np.ndarray:
     return slice_to_tiles(codes, n_bits, tile).occupancy()
+
+
+def tiled_plane_occupancy(tiled_codes: np.ndarray, n_bits: int) -> np.ndarray:
+    """bool [Nq, ..., nr, nc]: which (plane, tile) pairs hold at least one
+    '1' — the occupancy (= storage/DMA-skip) unit of the plane-CSC format.
+    Plane index ``q`` (0-indexed, MSB first) is byte bit ``Nq - 1 - q``.
+    Accepts already-tiled codes ``[..., nr, nc, tr, tc]``.
+    """
+    return np.stack([((tiled_codes >> (n_bits - 1 - q)) & 1).any(axis=(-1, -2))
+                     for q in range(n_bits)])
 
 
 def nonempty_rows_per_tile(

@@ -32,20 +32,25 @@ __all__ = ["pack_sme_param", "convert_params_to_sme", "sme_dequant_jnp",
 
 
 def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
-                   tile=(128, 128), backend=None, row_perm=None) -> dict:
+                   tile=(128, 128), backend=None, row_perm=None,
+                   squeeze_max=None) -> dict:
     """Compress one 2-D weight to the raw packed-dict format.
 
-    ``backend`` ("v1" | "v2" | "all" | None) additionally emits that
-    execution backend's kernel-ready CSC operands under ``sme_<name>_*``
-    keys, so serving never packs at call time (DESIGN.md §3).
+    ``backend`` ("v1" | "v2" | "v3" | "all" | None) additionally emits
+    that execution backend's kernel-ready CSC operands under
+    ``sme_<name>_*`` keys, so serving never packs at call time
+    (DESIGN.md §3).
 
     ``row_perm`` packs the tile-densified layout ``w2d[row_perm]`` and
     records the permutation under ``sme_perm`` so ``sme_apply`` gathers
     the input to match (DESIGN.md §4; ``compiler.reorder``).
+
+    ``squeeze_max`` (``> squeeze``) enables per-tile squeeze depth (free
+    deepening only — exact); the depths travel as a ``sme_tilesq`` leaf.
     """
     smew = sme_compress(np.asarray(w2d, np.float64), n_bits=n_bits,
                         window=window, squeeze=squeeze, tile=tile,
-                        row_perm=row_perm)
+                        row_perm=row_perm, squeeze_max=squeeze_max)
     k, n = smew.shape
     out = {
         "sme_codes": smew.tiled_codes,                       # [nr,nc,tr,tc] u8
@@ -56,6 +61,7 @@ def pack_sme_param(w2d: np.ndarray, n_bits=8, window=3, squeeze=1,
         "sme_nbits": np.asarray(n_bits, np.int32),           # ()
         "sme_squeezed": np.asarray(squeeze, np.int32),       # ()
         "sme_window": np.asarray(window, np.int32),          # ()
+        "sme_tilesq": smew.tile_squeeze(),                   # [nr,nc] u8
     }
     if row_perm is not None:
         out["sme_perm"] = np.asarray(row_perm, np.int32)     # [K]
@@ -71,7 +77,7 @@ def _backend_names(backend) -> tuple:
     if backend in (None, "xla", "auto"):
         return ()
     if backend == "all":
-        return ("v1", "v2")
+        return ("v1", "v2", "v3")
     return (backend,)
 
 
@@ -91,18 +97,19 @@ def _eligible(path_names, leaf) -> bool:
 
 def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
                           tile=(128, 128), predicate=None, backend=None,
-                          plan=None):
+                          plan=None, squeeze_max=None):
     """Returns a new param tree with eligible weights SME-packed.
 
-    ``backend`` ("v1" | "v2" | "all" | None) also emits kernel-ready CSC
-    operands per weight (stacked expert dims share one padded list length
-    so the operand arrays stay rectangular); ``core.backend.sme_apply``
-    then dispatches with zero call-time packing.
+    ``backend`` ("v1" | "v2" | "v3" | "all" | None) also emits kernel-ready
+    CSC operands per weight (stacked expert dims share one padded list
+    length so the operand arrays stay rectangular);
+    ``core.backend.sme_apply`` then dispatches with zero call-time packing.
 
     ``plan`` (a :class:`repro.compiler.plan.CompilePlan`) overrides the
     global setting per layer: each eligible weight uses its
-    ``LayerPlan``'s ``(n_bits, window, squeeze, backend)`` and, when the
-    plan marks it, the tile-densifying row reordering — this is the one
+    ``LayerPlan``'s ``(n_bits, window, squeeze, squeeze_max, backend)``
+    and, when the plan marks it, the tile-densifying row reordering (at
+    the plan's level: codeword tiles or bit-plane tiles) — this is the one
     code path shared by inline conversion and the offline ``.smez``
     compiler (DESIGN.md §4).
     """
@@ -123,6 +130,7 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
         lp = plan.for_path(path) if plan is not None else None
         nb, win, sq = (lp.n_bits, lp.window, lp.squeeze) if lp \
             else (n_bits, window, squeeze)
+        sq_max = (lp.squeeze_max or None) if lp else squeeze_max
         layer_backend = lp.backend if lp else backend
         lead = leaf.shape[:-2]
         k, n = leaf.shape[-2:]
@@ -132,9 +140,11 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
             # reordering is 2-D only: stacked slices would each want their
             # own permutation, but share one input gather
             from repro.compiler.reorder import plan_row_permutation
-            perm = plan_row_permutation(flat[0], n_bits=nb, window=win,
-                                        tile=tile)
-        packed = [pack_sme_param(flat[i], nb, win, sq, tile, row_perm=perm)
+            perm = plan_row_permutation(
+                flat[0], n_bits=nb, window=win, tile=tile,
+                level=getattr(lp, "reorder_level", "tile") or "tile")
+        packed = [pack_sme_param(flat[i], nb, win, sq, tile, row_perm=perm,
+                                 squeeze_max=sq_max)
                   for i in range(flat.shape[0])]
         # meta keys stack too (shape == lead): model code may lax.scan over
         # stacked layers, which slices every leaf along the leading axis
@@ -235,6 +245,7 @@ def abstract_sme_params(aparams, tile=(128, 128), predicate=None):
             "sme_nbits": jax.ShapeDtypeStruct(lead, jnp.int32),
             "sme_squeezed": jax.ShapeDtypeStruct(lead, jnp.int32),
             "sme_window": jax.ShapeDtypeStruct(lead, jnp.int32),
+            "sme_tilesq": jax.ShapeDtypeStruct(lead + (nr, nc), jnp.uint8),
         }
 
     return walk(aparams, [])

@@ -23,12 +23,13 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .bitslice import tile_codes, untile_codes
+from .bitslice import tile_codes, tiled_plane_occupancy, untile_codes
 from .quant import QuantizedTensor, quantize
 from .squeeze import SqueezeResult, squeeze_out
 
 __all__ = ["SMEWeight", "sme_compress", "sme_matmul_ref_np",
-           "csc_tile_order", "pack_csc_reference"]
+           "csc_tile_order", "pack_csc_reference",
+           "plane_csc_order", "pack_plane_csc_reference"]
 
 
 @dataclasses.dataclass
@@ -49,6 +50,8 @@ class SMEWeight:
     sign_packed: np.ndarray         # uint8 [K, ceil(N/8)] (1 = negative)
     scale: np.ndarray               # float64, broadcastable to [K, N]
     occupancy: np.ndarray           # bool [nr, nc]
+    tile_sq: Optional[np.ndarray] = None   # uint8 [nr, nc] per-tile squeeze
+    #                                        depth (None = uniform `squeezed`)
 
     # ---------------------------------------------------------------- props
     @property
@@ -78,6 +81,13 @@ class SMEWeight:
         return (1.0 - 2.0 * bits).astype(np.float64)
 
     # ------------------------------------------------------------- resources
+    def tile_squeeze(self) -> np.ndarray:
+        """uint8 [nr, nc] per-tile squeeze depth (filled with ``squeezed``
+        when the squeeze was uniform)."""
+        if self.tile_sq is not None:
+            return self.tile_sq
+        return np.full(self.grid, self.squeezed, dtype=np.uint8)
+
     def live_plane_occupancy(self) -> np.ndarray:
         """bool [live_bits, nr, nc]."""
         occ = []
@@ -86,27 +96,74 @@ class SMEWeight:
             occ.append(bit.any(axis=(-1, -2)))
         return np.stack(occ) if occ else np.zeros((0,) + self.grid, bool)
 
+    def plane_occupancy(self) -> np.ndarray:
+        """bool [Nq, nr, nc] over *absolute* planes of the shifted codes —
+        the occupancy unit of the plane-CSC (v3) format.  Planes above a
+        tile's squeeze depth are empty by the squeeze invariant.
+
+        Memoized per instance (an Nq-pass scan of the whole code array;
+        the planner prices every candidate with it several times) —
+        callers must treat ``tiled_codes`` as frozen after construction,
+        which everything in the pipeline does."""
+        cached = self.__dict__.get("_plane_occ")
+        if cached is None:
+            cached = tiled_plane_occupancy(self.tiled_codes, self.n_bits)
+            self.__dict__["_plane_occ"] = cached
+        return cached
+
+    def plane_tiles_used(self) -> int:
+        """Occupied (plane, tile) pairs = plane-CSC storage/DMA units."""
+        return int(self.plane_occupancy().sum())
+
     def crossbars_used(self) -> int:
         return int(self.live_plane_occupancy().sum())
 
     def storage_bits_per_weight(self, fmt: str = "planes") -> float:
         """Weight-storage footprint under a given packed format.
 
-        * ``bytecode`` — occupied tiles stored as whole uint8 codewords
+        * ``bytecode``   — occupied tiles stored as whole uint8 codewords
           (kernel v1): ``8 * occ_tiles * tr * tc`` bits.
-        * ``planes``   — only non-empty (tile, plane) bitmaps stored
-          (kernel v2): ``occ_planes * tr * tc`` bits.
-        Both add 1 sign bit per weight plus per-tile metadata
-        (row_exp: tr bytes per occupied tile; index: 4 B per occupied tile).
+        * ``planes``     — non-empty *live* (tile, plane) bitmaps, coupled
+          per tile (the pre-v3 accounting): ``occ_planes * tr * tc`` bits.
+        * ``minifloat6`` — the v2 format: 6 bits/code on occupied tiles
+          (sign included in the code; raises when the format cannot hold
+          this setting — see ``core.minifloat``).
+        * ``plane_csc``  — the v3 format exactly: one 1-bit bitmap per
+          occupied (plane, tile) pair, signs once per weight, dense
+          ``2^row_exp`` f32 per tile row, and the per-entry CSC index
+          (rowid/shift/last i32 + per-column nnz).
+        ``bytecode``/``planes``/``plane_csc`` add 1 sign bit per weight;
+        the tile-CSC formats add the tile metadata (row_exp: tr bytes per
+        occupied tile; index: 4 B per occupied tile).
+
+        This is the one authoritative byte accounting — the compiler's
+        planner and the ``bench_plane_occupancy`` CI gate both price
+        formats through it.
         """
         tr, tc = self.tile
+        nr, nc = self.grid
         occ_tiles = int(self.occupancy.sum())
-        meta_bits = occ_tiles * (tr * 8 + 32)
         sign_bits = self.n_weights
         if fmt == "bytecode":
             payload = occ_tiles * tr * tc * 8
+            meta_bits = occ_tiles * (tr * 8 + 32)
         elif fmt == "planes":
             payload = int(self.live_plane_occupancy().sum()) * tr * tc
+            meta_bits = occ_tiles * (tr * 8 + 32)
+        elif fmt == "minifloat6":
+            if not (self.squeezed >= 1 and self.window <= 3
+                    and self.live_bits <= 7):
+                raise ValueError(
+                    "minifloat-6 needs squeeze >= 1, window <= 3, "
+                    "live_bits <= 7")
+            payload = occ_tiles * tr * tc * 6        # sign inside the code
+            meta_bits = occ_tiles * (tr * 8 + 32)
+            sign_bits = 0
+        elif fmt == "plane_csc":
+            ents = self.plane_tiles_used()
+            payload = ents * tr * tc                 # 1 bit per weight-plane
+            meta_bits = ents * 96 + nc * 32 \
+                + nr * nc * tr * 32                  # index + dense rowscale
         else:
             raise ValueError(f"unknown fmt {fmt!r}")
         return (payload + meta_bits + sign_bits) / self.n_weights
@@ -206,6 +263,67 @@ class SMEWeight:
         bits = np.unpackbits(self.sign_packed, axis=1)[:, :n]     # [K, N] 1=neg
         return tile_codes(bits, self.tile)
 
+    def pack_plane_csc(self, pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Plane-CSC layout consumed by the ``sme_spmm_planes`` (v3) kernel.
+
+        The unit of occupancy is the *(plane, tile)* pair: per output-column
+        tile ``j`` the occupied plane-tiles are listed sorted by
+        ``(row_tile, plane)`` — planes of one tile are adjacent, so the
+        kernel can splice them back into the codeword in a VMEM scratch and
+        run **one** MXU matmul per (row, col) tile group (bit-identical to
+        the v1 bytecode kernel; DESIGN.md §2).  Lists are padded to
+        ``L = max_j nnz(j)`` (or ``pad_to``) for a rectangular
+        ``(M_tiles, N_tiles, L)`` grid; padding slots are guarded by ``nnz``.
+
+        Signs and the squeeze compensation are stored **once per weight /
+        tile row**, not per plane: ``sign``/``rowscale`` are dense over the
+        tile grid and the kernel indexes them with ``rowid`` on the
+        scalar-prefetch path.
+
+        Returns dict with:
+          planes   u8  [Nt, L, tr//8, tc]  bit-packed plane bitmap (rows
+                                           packed MSB-first, np.packbits)
+          shift    i32 [Nt, L]             integer bit value exponent of the
+                                           entry's plane (= Nq-1-q); the
+                                           kernel splices with ``2^shift``
+          last     i32 [Nt, L]             1 on the final plane of its
+                                           (row, col) tile group
+          rowid    i32 [Nt, L]             source row-tile index into x
+          nnz      i32 [Nt]                occupied plane-tiles per column
+          sign     u8  [nr, nc, tr//8, tc] dense packed sign bits (1 = neg)
+          rowscale f32 [nr, nc, tr]        dense 2^row_exp compensation
+        """
+        nr, nc = self.grid
+        tr, tc = self.tile
+        occp = self.plane_occupancy()                        # [Nq, nr, nc]
+        co = occp.transpose(2, 1, 0)                         # [nc, nr, Nq]
+        nnz = co.reshape(nc, -1).sum(axis=1).astype(np.int32)
+        L = int(pad_to if pad_to is not None else max(int(nnz.max()), 1))
+        if int(nnz.max()) > L:
+            raise ValueError(f"pad_to={L} < max plane-nnz per column "
+                             f"{int(nnz.max())}")
+        planes = np.zeros((nc, L, tr // 8, tc), dtype=np.uint8)
+        shift = np.zeros((nc, L), dtype=np.int32)
+        last = np.zeros((nc, L), dtype=np.int32)
+        rowid = np.zeros((nc, L), dtype=np.int32)
+        col, row, q, slot = plane_csc_order(occp)
+        if col.size:
+            sh = (self.n_bits - 1 - q).astype(np.int64)
+            bits = ((self.tiled_codes[row, col] >> sh[:, None, None]) & 1
+                    ).astype(np.uint8)                       # [E, tr, tc]
+            planes[col, slot] = np.packbits(bits, axis=1)
+            shift[col, slot] = sh.astype(np.int32)
+            rowid[col, slot] = row
+            grp_end = np.ones(col.size, dtype=bool)
+            grp_end[:-1] = (col[1:] != col[:-1]) | (row[1:] != row[:-1])
+            last[col, slot] = grp_end.astype(np.int32)
+        return {
+            "planes": planes, "shift": shift, "last": last,
+            "rowid": rowid, "nnz": nnz,
+            "sign": np.packbits(self.sign_tiled(), axis=-2),
+            "rowscale": np.exp2(self.row_exp.astype(np.float32)),
+        }
+
 
 def csc_tile_order(occ: np.ndarray):
     """Occupied tiles of a [nr, nc] occupancy map in CSC order.
@@ -219,6 +337,58 @@ def csc_tile_order(occ: np.ndarray):
     offsets = np.cumsum(nnz) - nnz      # first flat slot of each column
     slot = np.arange(col.size) - np.repeat(offsets, nnz)
     return col, row, slot
+
+
+def plane_csc_order(occp: np.ndarray):
+    """Occupied (plane, tile) pairs of a [Nq, nr, nc] plane-occupancy map
+    in plane-CSC order.
+
+    Returns (col, row, plane, slot) index vectors sorted by
+    ``(col, row, plane)``: entry ``t`` says occupied plane-tile
+    ``(plane[t], row[t], col[t])`` lands in list slot ``slot[t]`` of its
+    column.  Keeping planes of one (row, col) tile adjacent is what lets
+    the kernel splice them in VMEM before a single MXU matmul.
+    """
+    co = occp.transpose(2, 1, 0)                  # [nc, nr, Nq]
+    col, row, plane = np.nonzero(co)              # sorted by (col, row, plane)
+    nnz = co.reshape(co.shape[0], -1).sum(axis=1).astype(np.int64)
+    offsets = np.cumsum(nnz) - nnz
+    slot = np.arange(col.size) - np.repeat(offsets, nnz)
+    return col, row, plane, slot
+
+
+def pack_plane_csc_reference(smew: "SMEWeight",
+                             pad_to: Optional[int] = None
+                             ) -> Dict[str, np.ndarray]:
+    """Loop oracle for :meth:`SMEWeight.pack_plane_csc` (regression target
+    for the vectorized gather, like :func:`pack_csc_reference` for v1)."""
+    nr, nc = smew.grid
+    tr, tc = smew.tile
+    occp = smew.plane_occupancy()
+    nnz = occp.transpose(2, 1, 0).reshape(nc, -1).sum(axis=1).astype(np.int32)
+    L = int(pad_to if pad_to is not None else max(int(nnz.max()), 1))
+    if int(nnz.max()) > L:
+        raise ValueError(f"pad_to={L} < max plane-nnz per column {int(nnz.max())}")
+    planes = np.zeros((nc, L, tr // 8, tc), dtype=np.uint8)
+    shift = np.zeros((nc, L), dtype=np.int32)
+    last = np.zeros((nc, L), dtype=np.int32)
+    rowid = np.zeros((nc, L), dtype=np.int32)
+    for j in range(nc):
+        ents = [(i, q) for i in range(nr) for q in range(smew.n_bits)
+                if occp[q, i, j]]
+        for l, (i, q) in enumerate(ents):
+            sh = smew.n_bits - 1 - q
+            bits = ((smew.tiled_codes[i, j] >> sh) & 1).astype(np.uint8)
+            planes[j, l] = np.packbits(bits, axis=0)
+            shift[j, l] = sh
+            rowid[j, l] = i
+            last[j, l] = int(l + 1 == len(ents) or ents[l + 1][0] != i)
+    return {
+        "planes": planes, "shift": shift, "last": last,
+        "rowid": rowid, "nnz": nnz,
+        "sign": np.packbits(smew.sign_tiled(), axis=-2),
+        "rowscale": np.exp2(smew.row_exp.astype(np.float32)),
+    }
 
 
 def pack_csc_reference(smew: "SMEWeight",
@@ -262,6 +432,7 @@ def sme_compress(
     channel_axis: Optional[int] = None,
     method: str = "sme",
     row_perm: Optional[np.ndarray] = None,
+    squeeze_max: Optional[int] = None,
 ) -> SMEWeight:
     """Run the full SME pipeline on a real weight matrix ``w[K, N]``.
 
@@ -270,6 +441,12 @@ def sme_compress(
     represents the *permuted* layout: callers must gather the input with
     the same permutation (``x[..., row_perm]``), which ``sme_apply`` does
     when the packed param carries ``sme_perm``.
+
+    ``squeeze_max`` (``> squeeze``) enables per-tile squeeze depth: each
+    tile free-deepens past the mandatory ``squeeze`` rounds up to
+    ``squeeze_max`` (exact — dequant is bit-identical to the global
+    squeeze; ``core.squeeze.squeeze_out``), concentrating live planes so
+    the plane-CSC (v3) format stores fewer (plane, tile) units.
     """
     if w.ndim != 2:
         raise ValueError("sme_compress expects a 2-D weight matrix")
@@ -278,7 +455,8 @@ def sme_compress(
     q: QuantizedTensor = quantize(
         w, method=method, n_bits=n_bits, window=window, channel_axis=channel_axis
     )
-    sq: SqueezeResult = squeeze_out(q.codes, n_bits, squeeze, tile)
+    sq: SqueezeResult = squeeze_out(q.codes, n_bits, squeeze, tile,
+                                    x_max=squeeze_max)
     occ = (sq.tiled_codes != 0).any(axis=(-1, -2))
     signs = np.packbits((q.signs < 0).astype(np.uint8), axis=1)
     return SMEWeight(
@@ -286,7 +464,7 @@ def sme_compress(
         tile=tile, method=method,
         tiled_codes=sq.tiled_codes, row_exp=sq.row_exp,
         sign_packed=signs, scale=np.asarray(q.scale, dtype=np.float64),
-        occupancy=occ,
+        occupancy=occ, tile_sq=sq.tile_sq,
     )
 
 

@@ -15,11 +15,22 @@ exponents in ``0..x``.  The error is bounded by the dropped LSBs
 (``<= (2^x - 1) * 2^-Nq`` per weight, pre-scale): rows that *triggered* a
 squeeze carry an S-window pattern anchored at the MSB, so their trailing
 bits are zero and they lose nothing — exactly the paper's argument.
+
+**Per-tile depth** (``x_max > x``): each tile keeps squeezing past the
+mandatory ``x`` rounds for as long as the round is *free* — no row that
+would shift has its LSB (bit ``Nq``) set, so no information is dropped.
+The tile freezes at its first would-be-lossy round, giving per-tile
+depths ``tile_sq[nr, nc]`` in ``[x, x_max]`` with dequant **bit-identical**
+to the global-``x`` squeeze (free rounds only relabel bits between the
+code and the input exponent).  For S-window codes every round up to
+``Nq - S`` is free, so deep per-tile squeeze concentrates each tile's
+live planes into a band of at most ~``S`` planes — the representation the
+plane-CSC (v3) format stores and skips per (plane, tile).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -35,14 +46,23 @@ class SqueezeResult:
     tiled_codes: np.ndarray    # uint8/16 [nr, nc, tr, tc] shifted codewords
     row_exp: np.ndarray        # uint8 [nr, nc, tr] per-tile-row input exponent (0..x)
     n_bits: int                # original Nq
-    squeezed: int              # x = number of planes squeezed out
+    squeezed: int              # x = mandatory squeeze depth (min over tiles)
     shape: Tuple[int, int]     # original (K, N)
     tile: Tuple[int, int]
+    tile_sq: Optional[np.ndarray] = None   # uint8 [nr, nc] per-tile depth (None = uniform x)
 
     @property
     def live_bits(self) -> int:
         """Planes that still hold data (Nq - x)."""
         return self.n_bits - self.squeezed
+
+    def tile_squeeze(self) -> np.ndarray:
+        """uint8 [nr, nc] per-tile squeeze depth (filled with ``squeezed``
+        for a uniform/global squeeze)."""
+        if self.tile_sq is not None:
+            return self.tile_sq
+        nr, nc = self.tiled_codes.shape[:2]
+        return np.full((nr, nc), self.squeezed, dtype=np.uint8)
 
     def live_plane_occupancy(self) -> np.ndarray:
         """bool [Nq - x, nr, nc] occupancy of the surviving planes."""
@@ -61,31 +81,56 @@ def squeeze_out(
     n_bits: int,
     x: int,
     tile: Tuple[int, int] = (128, 128),
+    x_max: Optional[int] = None,
 ) -> SqueezeResult:
     """Apply ``x`` rounds of squeeze-out to a codeword matrix ``codes[K, N]``.
 
     Row decisions are made independently per tile (each crossbar has its own
     input register / RCMR, paper Fig. 6-B), so the result lives in the tiled
     view: different column-tiles of the same matrix row may shift differently.
+
+    ``x_max`` (``> x``) enables per-tile free-deepening: after the ``x``
+    mandatory rounds, a tile keeps squeezing while every shifting row's
+    LSB is zero (an exact relabeling — dequant is bit-identical to the
+    global-``x`` result) and freezes at its first lossy round or at
+    ``x_max``.  The per-tile depths land in ``SqueezeResult.tile_sq``.
     """
     if not 0 <= x < n_bits:
         raise ValueError(f"squeeze depth x={x} must be in [0, Nq)")
+    if x_max is None:
+        x_max = x
+    if not x <= x_max < n_bits:
+        raise ValueError(f"x_max={x_max} must be in [x={x}, Nq)")
     tiled = tile_codes(codes, tile).astype(codes.dtype)    # [nr, nc, tr, tc]
     nr, nc, tr, tc = tiled.shape
     row_exp = np.zeros((nr, nc, tr), dtype=np.uint8)
+    alive = np.ones((nr, nc), dtype=bool)                  # tiles still squeezing
+    tile_sq = np.zeros((nr, nc), dtype=np.uint8)
 
-    for t in range(x):
-        # Current MSB plane is (1-indexed) plane t+1: byte bit Nq-(t+1).
+    for t in range(x_max):
+        # Current MSB plane of every alive tile is (1-indexed) plane t+1:
+        # byte bit Nq-(t+1) (tiles progress in lockstep, so depth == t).
         msb = (tiled >> (n_bits - (t + 1))) & 1            # [nr, nc, tr, tc]
         hit = msb.any(axis=-1)                             # [nr, nc, tr]
-        tiled = np.where(hit[..., None], tiled >> 1, tiled)
-        row_exp += hit.astype(np.uint8)
+        if t >= x:
+            # a round is free iff no shifting row drops a set LSB; a tile
+            # freezes permanently at its first lossy optional round
+            lossy = (hit & ((tiled & 1) != 0).any(axis=-1)).any(axis=-1)
+            alive &= ~lossy
+        shift = hit & alive[..., None]
+        tiled = np.where(shift[..., None], tiled >> 1, tiled)
+        row_exp += shift.astype(np.uint8)
+        tile_sq += alive.astype(np.uint8)
 
-    # Invariant: after x rounds the top-x bits of every codeword are zero.
-    assert int(((tiled >> (n_bits - x)) if x else np.zeros(1, np.uint8)).max()) == 0
+    # Invariant: every tile's top tile_sq planes are zero (>= x everywhere).
+    if x_max:
+        depth = tile_sq.astype(np.int64)
+        top = tiled >> np.maximum(n_bits - depth, 0)[..., None, None]
+        assert int(np.where(depth[..., None, None] > 0, top, 0).max()) == 0
     return SqueezeResult(
         tiled_codes=tiled, row_exp=row_exp, n_bits=n_bits,
         squeezed=x, shape=codes.shape, tile=tile,
+        tile_sq=tile_sq if x_max > x else None,
     )
 
 

@@ -1,4 +1,6 @@
 from .ops import (pack_operands, sme_linear, sme_linear_from_weight,
-                  pack_operands6, sme_linear6_from_weight)
+                  pack_operands6, sme_linear6_from_weight,
+                  pack_operands_planes, sme_linear_planes_from_weight)
 from .sme_spmm import sme_spmm
 from .sme_spmm6 import sme_spmm6
+from .sme_spmm_planes import sme_spmm_planes

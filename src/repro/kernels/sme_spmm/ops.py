@@ -16,7 +16,8 @@ import numpy as np
 from repro.core.sme import SMEWeight
 
 __all__ = ["pack_operands", "sme_linear", "sme_linear_from_weight",
-           "pack_operands6", "sme_linear6_from_weight"]
+           "pack_operands6", "sme_linear6_from_weight",
+           "pack_operands_planes", "sme_linear_planes_from_weight"]
 
 
 def _scale_row(smew: SMEWeight) -> jnp.ndarray:
@@ -80,6 +81,32 @@ def sme_linear6_from_weight(x, smew: SMEWeight, bm: int = 128,
     param = {"sme_scale": ops["scale"],
              "sme_sign": jax.ShapeDtypeStruct((k, -(-n // 8)), jnp.uint8),
              "sme_squeezed": smew.squeezed}
+    lead = x.shape[:-1]
+    y = be.matmul2d(x.reshape(-1, x.shape[-1]), ops, param,
+                    bm=bm, interpret=interpret)
+    return y.reshape(*lead, n).astype(out_dtype)
+
+
+def pack_operands_planes(smew: SMEWeight,
+                         pad_to: Optional[int] = None) -> dict:
+    """Plane-CSC gather (kernel v3: per-(plane, tile) 1-bit bitmaps)."""
+    from repro.core.backend import get_backend
+    ops = get_backend("v3").pack_weight(smew, pad_to=pad_to)
+    return {**{k: jnp.asarray(v) for k, v in ops.items()},
+            "scale": _scale_row(smew)}
+
+
+def sme_linear_planes_from_weight(x, smew: SMEWeight, bm: int = 128,
+                                  out_dtype=jnp.float32,
+                                  interpret: Optional[bool] = None):
+    """v3 convenience wrapper: plane-CSC splice kernel end to end."""
+    from repro.core import backend as B
+    be = B.get_backend("v3")
+    ops = pack_operands_planes(smew)
+    k, n = smew.shape
+    param = {"sme_scale": ops["scale"],
+             "sme_sign": jax.ShapeDtypeStruct((k, -(-n // 8)), jnp.uint8),
+             "sme_nbits": smew.n_bits}
     lead = x.shape[:-1]
     y = be.matmul2d(x.reshape(-1, x.shape[-1]), ops, param,
                     bm=bm, interpret=interpret)

@@ -16,7 +16,8 @@ weight matrix stored as CSC-of-128x128-tiles (see
 
 Grid: ``(M_tiles, N_tiles, L)`` with L innermost — each output block stays
 resident in a VMEM f32 scratch accumulator across its column's tile list
-and is flushed once.
+and is flushed once.  The grid/init/accum/flush scaffolding is shared with
+the v2/v3 kernels (``csc_grid``).
 """
 from __future__ import annotations
 
@@ -24,31 +25,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .csc_grid import csc_pallas_call, csc_step, slot_spec, unpack_row_bits
 
 __all__ = ["sme_spmm"]
 
 
 def _kernel(rowid_ref, nnz_ref, x_ref, codes_ref, sign_ref, rowscale_ref,
             o_ref, acc_ref, *, n_bits: int, bk: int, bn: int):
-    j = pl.program_id(1)
-    l = pl.program_id(2)
-    last = pl.num_programs(2) - 1
-
-    @pl.when(l == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(l < nnz_ref[j])
-    def _accum():
+    def accum(j, l):
         codes = codes_ref[0, 0]                              # [bk, bn] u8
         mag = codes.astype(jnp.float32) * (2.0 ** -n_bits)
         # sign bits packed along rows, MSB-first (np.packbits axis=0)
-        sb = sign_ref[0, 0]                                  # [bk//8, bn] u8
-        shifts = 7 - jax.lax.broadcasted_iota(jnp.uint8, (1, 8, 1), 1)
-        bits = (sb[:, None, :] >> shifts) & jnp.uint8(1)
-        sgn = 1.0 - 2.0 * bits.reshape(bk, bn).astype(jnp.float32)
+        bits = unpack_row_bits(sign_ref[0, 0], bk, bn)
+        sgn = 1.0 - 2.0 * bits.astype(jnp.float32)
         rs = rowscale_ref[0, 0]                              # [bk] f32 = 2^row_exp
         w = mag * sgn * rs[:, None]
         x = x_ref[...].astype(jnp.float32)
@@ -57,9 +47,7 @@ def _kernel(rowid_ref, nnz_ref, x_ref, codes_ref, sign_ref, rowscale_ref,
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(l == last)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    csc_step(nnz_ref, o_ref, acc_ref, accum)
 
 
 def sme_spmm(
@@ -76,30 +64,12 @@ def sme_spmm(
     interpret: bool = False,
 ) -> jax.Array:
     """Returns y [M, Nt*bn].  M must be a multiple of ``bm``."""
-    m, k_pad = x.shape
     nt, L, bk, bn = codes.shape
-    if m % bm:
-        raise ValueError(f"M={m} not a multiple of bm={bm}")
-    if k_pad % bk:
-        raise ValueError(f"K_pad={k_pad} not a multiple of bk={bk}")
-
-    grid = (m // bm, nt, L)
     kernel = functools.partial(_kernel, n_bits=n_bits, bk=bk, bn=bn)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda mi, j, l, rowid, nnz: (mi, rowid[j, l])),
-            pl.BlockSpec((1, 1, bk, bn), lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
-            pl.BlockSpec((1, 1, bk // 8, bn), lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
-            pl.BlockSpec((1, 1, bk), lambda mi, j, l, rowid, nnz: (j, l, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda mi, j, l, rowid, nnz: (mi, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, nt * bn), out_dtype),
-        interpret=interpret,
-    )(rowid, nnz, x, codes, sign, rowscale)
+    return csc_pallas_call(
+        kernel, x, scalars=(rowid, nnz),
+        tensors=(codes, sign, rowscale),
+        tensor_specs=[slot_spec(bk, bn), slot_spec(bk // 8, bn),
+                      slot_spec(bk)],
+        nt=nt, L=L, bm=bm, bk=bk, bn=bn,
+        out_dtype=out_dtype, interpret=interpret)

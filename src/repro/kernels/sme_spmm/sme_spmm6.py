@@ -8,7 +8,8 @@ the 6-bit minifloat re-encoding of squeezed SME codes (sign+exp+mant packed
     c   = unpack6(bytes)           # 4x [bk, bn/4] 6-bit lanes
     w   = (e>0) * sign * (4+m) * 2^-(e+squeezed+2) * 2^row_exp
 
-followed by one MXU matmul per tile.
+followed by one MXU matmul per tile.  Grid scaffolding shared via
+``csc_grid``.
 """
 from __future__ import annotations
 
@@ -16,24 +17,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .csc_grid import csc_pallas_call, csc_step, slot_spec
 
 __all__ = ["sme_spmm6"]
 
 
 def _kernel(rowid_ref, nnz_ref, x_ref, packed_ref, rowscale_ref,
             o_ref, acc_ref, *, squeezed: int, bk: int, bn: int):
-    j = pl.program_id(1)
-    l = pl.program_id(2)
-    last = pl.num_programs(2) - 1
-
-    @pl.when(l == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(l < nnz_ref[j])
-    def _accum():
+    def accum(j, l):
         pk = packed_ref[0, 0]                          # [bk, 3*bn/4] u8
         t = pk.reshape(bk, bn // 4, 3).astype(jnp.uint16)
         b0, b1, b2 = t[..., 0], t[..., 1], t[..., 2]
@@ -55,9 +47,7 @@ def _kernel(rowid_ref, nnz_ref, x_ref, packed_ref, rowscale_ref,
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(l == last)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    csc_step(nnz_ref, o_ref, acc_ref, accum)
 
 
 def sme_spmm6(
@@ -73,27 +63,11 @@ def sme_spmm6(
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k_pad = x.shape
     nt, L, bk, _ = packed.shape
-    if m % bm or k_pad % bk:
-        raise ValueError((m, bm, k_pad, bk))
-    grid = (m // bm, nt, L)
     kernel = functools.partial(_kernel, squeezed=squeezed, bk=bk, bn=bn)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda mi, j, l, rowid, nnz: (mi, rowid[j, l])),
-            pl.BlockSpec((1, 1, bk, 3 * bn // 4),
-                         lambda mi, j, l, rowid, nnz: (j, l, 0, 0)),
-            pl.BlockSpec((1, 1, bk), lambda mi, j, l, rowid, nnz: (j, l, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda mi, j, l, rowid, nnz: (mi, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, nt * bn), out_dtype),
-        interpret=interpret,
-    )(rowid, nnz, x, packed, rowscale)
+    return csc_pallas_call(
+        kernel, x, scalars=(rowid, nnz),
+        tensors=(packed, rowscale),
+        tensor_specs=[slot_spec(bk, 3 * bn // 4), slot_spec(bk)],
+        nt=nt, L=L, bm=bm, bk=bk, bn=bn,
+        out_dtype=out_dtype, interpret=interpret)

@@ -49,8 +49,10 @@ def main():
     ap.add_argument("--budget", type=float, default=0.06,
                     help="global weighted relative-error budget")
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "v1", "v2", "none"],
-                    help="kernel operand set to emit per layer")
+                    choices=["auto", "v1", "v2", "v3", "none"],
+                    help="kernel operand set to emit per layer (auto "
+                         "prices v3 plane-CSC vs v2/v1 per layer by "
+                         "measured bytes)")
     ap.add_argument("--measure", default="trial",
                     choices=["trial", "analytic"])
     ap.add_argument("--objective", default="bytes",

@@ -69,10 +69,11 @@ def main():
                          "packing; see repro.launch.compile)")
     ap.add_argument("--backend",
                     default=os.environ.get("SME_BACKEND", "auto"),
-                    choices=["auto", "xla", "v1", "v2"],
-                    help="SME execution backend; v1/v2 pre-pack kernel "
+                    choices=["auto", "xla", "v1", "v2", "v3"],
+                    help="SME execution backend; v1/v2/v3 pre-pack kernel "
                          "operands offline and serve through the Pallas "
-                         "block-sparse kernels (interpret mode off-TPU)")
+                         "block-sparse kernels (interpret mode off-TPU); "
+                         "v3 is the plane-CSC format (DESIGN.md §2)")
     ap.add_argument("--mesh", default="1,1",
                     help="serving mesh as 'data,model' (e.g. 2,2); params "
                          "and slot caches shard across it with bit-"
@@ -121,7 +122,8 @@ def main():
             from repro.core.integrate import (convert_params_to_sme,
                                               sme_storage_summary)
             params_np = jax.tree.map(np.asarray, params)
-            emit = args.backend if args.backend in ("v1", "v2") else None
+            emit = args.backend if args.backend in ("v1", "v2", "v3") \
+                else None
             if emit is None and args.backend == "auto" \
                     and jax.default_backend() == "tpu":
                 # auto on TPU serves through the Pallas kernels, which need

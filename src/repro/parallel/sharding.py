@@ -96,6 +96,20 @@ def _path_str(path) -> str:
 _SME_OPERAND_RANK = {"codes": 4, "sign": 4, "packed": 4,
                      "rowscale": 3, "rowid": 2, "nnz": 1}
 
+#: v3 (plane-CSC) operands: (base rank, spec axes).  The per-slot arrays
+#: lead with the column-tile axis ``nc`` like v1/v2, but the dense
+#: ``sign``/``rowscale`` side arrays are [nr, nc, ...] — their ``nc`` is
+#: axis 1, so the model-sharding axis position is per-operand here.
+_SME_V3_OPERAND_SPEC = {
+    "planes":   (4, ("model", None, None, None)),   # [nc, L, tr//8, tc]
+    "shift":    (2, ("model", None)),               # [nc, L]
+    "last":     (2, ("model", None)),               # [nc, L]
+    "rowid":    (2, ("model", None)),               # [nc, L]
+    "nnz":      (1, ("model",)),                    # [nc]
+    "sign":     (4, (None, "model", None, None)),   # [nr, nc, tr//8, tc]
+    "rowscale": (3, (None, "model", None)),         # [nr, nc, tr]
+}
+
 
 def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool,
                 exact: bool = False) -> P:
@@ -126,6 +140,18 @@ def _param_spec(mesh: Mesh, path: str, shape, fsdp: bool,
         return pad([None, "model"])
     if name == "sme_perm":                  # [..., K] row permutation
         return P(*([None] * nd))            # index leaf: replicate
+    if name == "sme_tilesq":                # [..., nr, nc] per-tile depths
+        return P(*([None] * nd))            # tiny u8 map: replicate
+    if name.startswith("sme_v3_"):
+        # plane-CSC operands: shard whole output-column tiles over 'model'
+        # like v1/v2 — the splice of any output column completes inside
+        # one shard — but the dense sign/rowscale side arrays carry the
+        # column-tile axis second, so the spec is per-operand.
+        op = name.split("_", 2)[2]
+        entry = _SME_V3_OPERAND_SPEC.get(op)
+        if entry is None or nd < entry[0]:
+            return P(*([None] * nd))
+        return pad(list(entry[1]))
     if name.startswith("sme_v1_") or name.startswith("sme_v2_"):
         # kernel CSC operand trees: shard the column-tile axis ``nc`` so
         # each shard owns whole output-column tiles (per-column nnz/rowid

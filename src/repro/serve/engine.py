@@ -206,7 +206,7 @@ class ServeEngine:
                                                place=place)
         kw.setdefault("backend",
                       manifest.get("extra", {}).get("serve_backend"))
-        if kw.get("backend") in ("v1", "v2"):
+        if kw.get("backend") in ("v1", "v2", "v3"):
             params = ensure_operands(params, kw["backend"], place=place)
         eng = cls(api, params, mesh=mesh, **kw)
         eng.plan = plan

@@ -14,7 +14,7 @@ from repro.models.common import linear
 
 RNG = np.random.default_rng(11)
 
-BACKENDS = ("xla", "v1", "v2")
+BACKENDS = ("xla", "v1", "v2", "v3")
 
 
 def _param(w, squeeze=1, n_bits=8, emit=None):
@@ -49,8 +49,9 @@ def test_use_backend_scoping():
 def test_resolve_prefers_packed_operands():
     w = RNG.normal(0, 0.3, (256, 256))
     # on any host, auto picks the backend whose operands are present
-    # (v2 over v1); with none packed, non-TPU hosts resolve to xla
+    # (v2 over v3 over v1); with none packed, non-TPU hosts resolve to xla
     assert B.resolve_backend(_param(w, emit="v1")).name == "v1"
+    assert B.resolve_backend(_param(w, emit="v3")).name == "v3"
     assert B.resolve_backend(_param(w, emit="all")).name == "v2"
     if jax.default_backend() != "tpu":
         assert B.resolve_backend(_param(w)).name == "xla"

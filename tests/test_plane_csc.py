@@ -1,0 +1,313 @@
+"""Plane-CSC (v3) format: pack-gather regressions, splice exactness
+(bit-identity to v1/v2 and the f32 dequant-matmul contract), per-tile
+squeeze properties, plane-level reordering, serve identity, and the
+``.smez`` cross-version round trip."""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backend as B
+from repro.core.integrate import convert_params_to_sme, pack_sme_param
+from repro.core.sme import (
+    pack_plane_csc_reference, sme_compress, sme_matmul_ref_np,
+)
+
+RNG = np.random.default_rng(23)
+
+
+def _param(w, emit=None, **kw):
+    return {k: jnp.asarray(v)
+            for k, v in pack_sme_param(w, backend=emit, **kw).items()}
+
+
+def _structured(k=384, n=384, seed=5, prune=0.85):
+    w = np.random.default_rng(seed).normal(0, 0.05, (k, n))
+    w[np.abs(w) < np.quantile(np.abs(w), prune)] = 0.0
+    return w
+
+
+# ------------------------------------------------------- pack regressions
+@pytest.mark.parametrize("k,n,squeeze,squeeze_max",
+                         [(300, 260, 1, None), (256, 384, 0, None),
+                          (130, 129, 2, None), (384, 384, 1, 5)])
+def test_pack_plane_csc_vectorized_bit_identical(k, n, squeeze, squeeze_max):
+    w = RNG.normal(0, 0.3, (k, n))
+    w[: k // 3] = 0.0                     # empty tiles + ragged plane-nnz
+    smew = sme_compress(w, squeeze=squeeze, squeeze_max=squeeze_max)
+    fast = smew.pack_plane_csc()
+    ref = pack_plane_csc_reference(smew)
+    assert set(fast) == set(ref)
+    for key in ref:
+        assert fast[key].dtype == ref[key].dtype, key
+        assert (fast[key] == ref[key]).all(), key
+
+
+def test_pack_plane_csc_pad_to_bit_identical():
+    smew = sme_compress(_structured(), squeeze=1)
+    be = B.get_backend("v3")
+    L = be.pad_hint(smew) + 3
+    fast = smew.pack_plane_csc(pad_to=L)
+    ref = pack_plane_csc_reference(smew, pad_to=L)
+    for key in ref:
+        assert (fast[key] == ref[key]).all(), key
+    with pytest.raises(ValueError):
+        smew.pack_plane_csc(pad_to=1)
+
+
+# ------------------------------------------------------- splice exactness
+def _bit_identity_case(n_bits, window, squeeze, squeeze_max, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, (200, 150))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.5)] = 0.0   # plane sparsity
+    x = rng.normal(0, 1, (5, 200)).astype(np.float32)
+    kw = dict(n_bits=n_bits, window=window, squeeze=squeeze,
+              squeeze_max=squeeze_max)
+    p = _param(w, **kw)
+    smew = sme_compress(w, **kw)
+    ys = {be: np.asarray(B.sme_apply(jnp.asarray(x), p, be), np.float64)
+          for be in ("v1", "v3")
+          + (("v2",) if B.SpmmV2Backend.supports_settings(
+              n_bits, window, squeeze) else ())}
+    # the spliced plane walk is bit-identical to the bytecode kernel (and
+    # to minifloat-6 where the format holds the setting) ...
+    for be, y in ys.items():
+        assert (y == ys["v1"]).all(), be
+    # ... and all of them satisfy the f32 dequant-matmul contract
+    ref = sme_matmul_ref_np(x, smew)
+    rel = np.abs(ys["v3"] - ref).max() / max(np.abs(ref).max(), 1e-9)
+    assert rel < 5e-5, (n_bits, window, squeeze, squeeze_max, rel)
+
+
+@pytest.mark.parametrize("n_bits,window,squeeze,squeeze_max", [
+    (8, 3, 0, None), (8, 3, 1, None), (8, 3, 2, None), (8, 2, 1, None),
+    (8, 4, 0, None), (6, 3, 1, None), (6, 2, 2, None),
+    (8, 3, 1, 7), (8, 2, 1, 6), (6, 3, 1, 5),
+])
+def test_v3_bit_identical_across_settings_grid(n_bits, window, squeeze,
+                                               squeeze_max):
+    _bit_identity_case(n_bits, window, squeeze, squeeze_max, seed=3)
+
+
+def test_v3_bit_identity_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(n_bits=st.sampled_from([6, 8]),
+           window=st.integers(2, 4),
+           squeeze=st.integers(0, 2),
+           deepen=st.booleans(),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def prop(n_bits, window, squeeze, deepen, seed):
+        squeeze_max = n_bits - 2 if deepen and squeeze < n_bits - 2 else None
+        _bit_identity_case(n_bits, window, squeeze, squeeze_max, seed)
+
+    prop()
+
+
+def test_v3_stacked_moe_experts_bit_identical():
+    E, D, F = 3, 256, 128
+    wi = RNG.normal(0, 0.3, (E, D, F))
+    wi[:, ::3] = 0.0
+    p = convert_params_to_sme({"wi": wi}, squeeze=1, squeeze_max=6,
+                              backend="all")["wi"]
+    x = RNG.normal(0, 1, (E, 4, D)).astype(np.float32)
+    y1 = np.asarray(B.sme_apply(jnp.asarray(x), p, "v1"))
+    y3 = np.asarray(B.sme_apply(jnp.asarray(x), p, "v3"))
+    assert (y1 == y3).all()
+    y_ref = np.stack([
+        sme_matmul_ref_np(x[e], sme_compress(wi[e], squeeze=1,
+                                             squeeze_max=6))
+        for e in range(E)])
+    rel = np.abs(y3.astype(np.float64) - y_ref).max() / np.abs(y_ref).max()
+    assert rel < 5e-5
+
+
+def test_v3_empty_column_and_jit():
+    w = RNG.normal(0, 0.3, (512, 384))
+    w[:, :128] = 0.0                      # first col-tile: plane-nnz == 0
+    w[128:384] = 0.0
+    p = _param(w, emit="v3")
+    x = RNG.normal(0, 1, (4, 512)).astype(np.float32)
+    y_e = np.asarray(B.sme_apply(jnp.asarray(x), p, "v3"))
+    y_j = np.asarray(jax.jit(lambda a, q: B.sme_apply(a, q, "v3"))(
+        jnp.asarray(x), p))
+    assert (y_e == y_j).all()
+    assert (y_e[:, :128] == 0).all()
+
+
+# ---------------------------------------------------- per-tile squeeze
+def test_per_tile_squeeze_is_exact_and_bounded():
+    w = _structured(prune=0.9)
+    g = sme_compress(w, squeeze=1)
+    t = sme_compress(w, squeeze=1, squeeze_max=7)
+    # free deepening is a pure relabeling: dequant is bit-identical
+    assert (t.dequant() == g.dequant()).all()
+    assert t.tile_sq is not None
+    assert (t.tile_sq >= 1).all() and (t.tile_sq <= 7).all()
+    assert int(t.tile_sq.max()) > 1, "pruned tiles should free-deepen"
+    # squeeze invariant per tile: top tile_sq planes empty
+    occp = t.plane_occupancy()
+    for (i, j), d in np.ndenumerate(t.tile_sq):
+        assert not occp[:int(d), i, j].any(), (i, j, d)
+    # deepening never stores more plane-CSC units
+    assert t.plane_tiles_used() <= g.plane_tiles_used()
+
+
+def test_tilesq_travels_in_param_and_artifact():
+    w = _structured()
+    p = pack_sme_param(w, squeeze=1, squeeze_max=7)
+    assert p["sme_tilesq"].shape == (3, 3)
+    smew = B.smeweight_from_param(p)
+    assert smew.tile_sq is not None
+    assert (smew.tile_sq == p["sme_tilesq"]).all()
+
+
+# ------------------------------------------------------ plane reordering
+def test_plane_reorder_frees_plane_tiles():
+    from repro.compiler.reorder import (
+        permutation_from_codes, plane_permutation_gain)
+    from repro.core.quant import quantize
+    rng = np.random.default_rng(9)
+    w = rng.normal(0, 0.05, (512, 256))
+    w *= np.where(np.arange(512) % 2 == 0, 1.0, 1 / 64.0)[:, None]
+    q = quantize(w, "sme", 8, 3)
+    before, after = plane_permutation_gain(q.codes)
+    assert after < before, (before, after)
+    perm = permutation_from_codes(q.codes, level="plane")
+    assert sorted(perm.tolist()) == list(range(512))
+    # reordered + v3 numerics stay exact (input gathered by sme_apply)
+    x = rng.normal(0, 1, (4, 512)).astype(np.float32)
+    p = _param(w, emit="v3", squeeze=1, row_perm=perm)
+    y = np.asarray(B.sme_apply(jnp.asarray(x), p, "v3"), np.float64)
+    y_ref = sme_matmul_ref_np(x, sme_compress(w, squeeze=1))
+    assert np.abs(y - y_ref).max() / np.abs(y_ref).max() < 5e-5
+
+
+def test_planner_picks_v3_on_plane_sparse_layer():
+    from repro.compiler import plan_model
+    tree = {"pruned": {"w": _structured(512, 512, prune=0.9)}}
+    plan = plan_model(tree, error_budget=0.06,
+                      predicate=lambda path, leaf: leaf.ndim == 2)
+    lp = plan.layers["pruned/w"]
+    assert lp.backend == "v3"
+    assert lp.occupied_plane_tiles > 0
+    packed = convert_params_to_sme(tree, plan=plan,
+                                   predicate=lambda path, leaf: leaf.ndim == 2)
+    assert "sme_v3_planes" in packed["pruned"]["w"]
+    assert B.resolve_backend(packed["pruned"]["w"]).name == "v3"
+
+
+# ------------------------------------------------------ serve identity
+def test_serve_tokens_bit_identical_v1_vs_v3():
+    """The acceptance contract: v3 logits (hence greedy tokens) through
+    ServeEngine are bit-identical to the v1/v2 dequant reference on the
+    interpret-mode serve configs."""
+    from repro.configs import ARCHS, scale_down
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = scale_down(ARCHS["qwen1.5-0.5b"], d_model=128, d_ff=256,
+                     head_dim=32, n_heads=4, n_kv_heads=4, vocab=256,
+                     n_layers=1)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+    ps = convert_params_to_sme(params, squeeze=1, backend="all")
+
+    def run(backend):
+        eng = ServeEngine(api, ps, slots=2, s_max=32, backend=backend)
+        reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                        max_new_tokens=4) for i in range(3)]
+        stats = eng.run(reqs, max_steps=40)
+        assert stats["completed"] == 3
+        return [r.out_tokens for r in reqs]
+
+    toks = {be: run(be) for be in ("v1", "v2", "v3")}
+    assert toks["v3"] == toks["v1"] == toks["v2"]
+
+
+def test_serve_ragged_identity_with_v3_stacked_moe():
+    """Ragged == solo stays bit-exact when the MoE expert stack serves
+    through the plane-CSC kernel (mirrors tests/test_serve_ragged.py)."""
+    from repro.configs import ARCHS, scale_down
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = scale_down(ARCHS["mixtral-8x7b"], d_model=128, d_ff=256,
+                     vocab=256, expert_dff=128)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+    ps = convert_params_to_sme(params, squeeze=1, backend="v3")
+    assert any("sme_v3_planes" in str(p) for p, _ in
+               jax.tree_util.tree_leaves_with_path(ps))
+
+    def requests():
+        rng = np.random.default_rng(0)
+        lens, max_new = (5, 7, 6), (4, 6, 3)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=lens[i],
+                                            dtype=np.int32),
+                        max_new_tokens=max_new[i]) for i in range(3)]
+
+    kw = dict(slots=2, s_max=32, backend="v3")
+    ragged = requests()
+    ServeEngine(api, ps, **kw).run(ragged, max_steps=100)
+    assert all(r.done for r in ragged)
+    for ref in requests():
+        ServeEngine(api, ps, **kw).run([ref], max_steps=100)
+        assert ragged[ref.rid].out_tokens == ref.out_tokens, ref.rid
+
+
+# -------------------------------------------------- artifact cross-version
+def _strip_v2_format_leaves(tree):
+    """Rewrite a packed tree to the version-1 on-disk vocabulary:
+    tile-CSC only (no sme_tilesq, no sme_v3_* operands)."""
+    if isinstance(tree, dict):
+        return {k: _strip_v2_format_leaves(v) for k, v in tree.items()
+                if not (k == "sme_tilesq" or k.startswith("sme_v3_"))}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_strip_v2_format_leaves(s) for s in tree)
+    return tree
+
+
+def test_artifact_cross_version_roundtrip(tmp_path):
+    from repro.compiler import (FORMAT_VERSION, load_artifact,
+                                read_manifest, save_artifact)
+    assert FORMAT_VERSION == 2
+    w = _structured()
+    x = RNG.normal(0, 1, (4, 384)).astype(np.float32)
+    tree = {"l": {"w": {k: np.asarray(v) for k, v in pack_sme_param(
+        w, squeeze=1, squeeze_max=7, backend="all").items()}}}
+
+    # current writer: format 2, plane-CSC leaves present
+    p2 = save_artifact(tmp_path / "v2f.smez", tree)
+    assert read_manifest(p2)["format_version"] == 2
+    loaded2, _, _ = load_artifact(p2)
+    y2 = np.asarray(B.sme_apply(jnp.asarray(x),
+                                {k: jnp.asarray(v) for k, v in
+                                 loaded2["l"]["w"].items()}, "v3"))
+
+    # simulated version-1 artifact: tile-CSC vocabulary + old version tag
+    v1_tree = _strip_v2_format_leaves(tree)
+    p1 = save_artifact(tmp_path / "v1f.smez", v1_tree)
+    man = json.loads((p1 / "manifest.json").read_text())
+    man["format_version"] = 1
+    (p1 / "manifest.json").write_text(json.dumps(man))
+    loaded1, _, manifest1 = load_artifact(p1)
+    assert manifest1["format_version"] == 1
+    param1 = {k: jnp.asarray(v) for k, v in loaded1["l"]["w"].items()}
+    assert "sme_tilesq" not in param1           # v1 vocabulary preserved
+    # old artifacts keep serving through the tile-CSC backends ...
+    y1 = np.asarray(B.sme_apply(jnp.asarray(x), param1, "v1"))
+    assert (y1 == y2).all()
+    # ... and v3 packs its operands from the raw codes on the fly, with
+    # per-tile depths defaulting to the global sme_squeezed
+    y3 = np.asarray(B.sme_apply(jnp.asarray(x), param1, "v3"))
+    assert (y3 == y2).all()
+    smew = B.smeweight_from_param({k: np.asarray(v)
+                                   for k, v in loaded1["l"]["w"].items()})
+    assert smew.tile_sq is None
+    assert (smew.tile_squeeze() == 1).all()

@@ -4,8 +4,8 @@ The contract (ISSUE 4): ``ServeEngine`` on any ``(data, model)`` mesh must
 emit **bit-identical** tokens to the degenerate 1x1 mesh — the exact-mode
 sharding rules only ever split output-feature / head / batch dims, so no
 float reduction crosses a device boundary.  Verified for the ragged-batch
-suite across dense, SME v1 and SME v2 backends (kernel backends in
-interpret mode on CPU), plus the ``.smez`` sharded-load path.
+suite across dense, SME v1, v2 and v3 (plane-CSC) backends (kernel
+backends in interpret mode on CPU), plus the ``.smez`` sharded-load path.
 
 Multi-device cases need forced host devices::
 
@@ -28,7 +28,7 @@ from repro.serve import Request, ServeEngine
 
 RNG = jax.random.key(0)
 MESHES = [(1, 1), (2, 2), (4, 1)]
-BACKENDS = [None, "v1", "v2"]
+BACKENDS = [None, "v1", "v2", "v3"]
 
 
 def _need(data, model):
