@@ -129,7 +129,16 @@ def bench_decode_bandwidth_model() -> List[Row]:
     """Memory-bound decode: tokens/s/chip = HBM_bw / bytes_per_token.
 
     bytes_per_token ~ weight bytes touched per token (batch amortizes the
-    KV cache differently; weights dominate for the assigned shapes)."""
+    KV cache differently; weights dominate for the assigned shapes).
+
+    The plane-CSC (v3) row on the pruned layer is gated against the
+    committed baseline ``benchmarks/baselines/decode_bandwidth.json`` —
+    a format or packing change that regresses v3 bytes/token fails the
+    suite (and CI) instead of silently shipping a fatter decode payload.
+    """
+    import json
+    import pathlib
+
     rows: List[Row] = []
     rng = np.random.default_rng(1)
     w = rng.normal(0, 0.04, (2048, 2048))
@@ -149,6 +158,170 @@ def bench_decode_bandwidth_model() -> List[Row]:
                      round(toks, 1),
                      f"{bytes_per_w:.3f} B/weight; speedup vs bf16 = "
                      f"{2.0 / bytes_per_w:.2f}x"))
+    # plane-CSC on the decode-relevant regime: a magnitude-pruned layer
+    # (deterministic rng, so the number is reproducible and gateable)
+    wp = rng.normal(0, 0.04, (1024, 1024))
+    wp[np.abs(wp) < np.quantile(np.abs(wp), 0.90)] = 0.0
+    smew3 = sme_compress(wp, squeeze=1, squeeze_max=7)
+    v3_bpw = smew3.storage_bits_per_weight("plane_csc") / 8
+    rows.append(("decode_bw/sme_plane_csc_pruned90/tokens_per_s_per_layerweight",
+                 round(bw / (wp.size * v3_bpw), 1),
+                 f"{v3_bpw:.4f} B/weight on pruned90 1024x1024; speedup vs "
+                 f"bf16 = {2.0 / v3_bpw:.2f}x"))
+    base_path = pathlib.Path(__file__).parent / "baselines" \
+        / "decode_bandwidth.json"
+    if base_path.exists():
+        ref = json.loads(base_path.read_text())["v3_bytes_per_weight_pruned90"]
+        if v3_bpw > ref * 1.02 + 1e-9:
+            raise RuntimeError(
+                f"v3 plane-CSC decode payload regressed: "
+                f"{v3_bpw:.4f} B/weight vs committed baseline {ref:.4f} "
+                f"(tolerance 2%) — see benchmarks/baselines/")
+        rows.append(("decode_bw/v3_baseline_check", 1,
+                     f"{v3_bpw:.4f} <= {ref:.4f} * 1.02"))
+    return rows
+
+
+def _time_us(f, *args, reps: int = 2) -> float:
+    y = f(*args)
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = f(*args)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _pruned(rng, k, n, frac):
+    w = rng.normal(0, 0.05, (k, n))
+    w[np.abs(w) < np.quantile(np.abs(w), frac)] = 0.0
+    return w
+
+
+def _banded(rng, k, n):
+    w = rng.normal(0, 0.05, (k, n))
+    w *= np.where(np.arange(k) % 2 == 0, 1.0, 1 / 64.0)[:, None]
+    return w
+
+
+def bench_decode_gemv() -> List[Row]:
+    """Decode-shaped (M in {1, 8, 32}) execution across every backend plus
+    the v3 decode kernel (``SME_DECODE_KERNEL=on``) on the layers where
+    plane-CSC pays: pruned and banded weights.
+
+    Two classes of numbers: interpret-mode walltimes (CPU smoke — the
+    grid/DMA structure is exercised, the absolute time is not meaningful)
+    and the modeled HBM bytes per decoded token, which IS the decode
+    currency on real hardware.  The suite fails unless v3 moves strictly
+    fewer modeled bytes/token than v2 on every layer here.
+    """
+    import os
+
+    from repro.compiler.reorder import plan_row_permutation
+    from repro.core import backend as B
+    from repro.core.integrate import pack_sme_param
+
+    rng = np.random.default_rng(7)
+    wb = _banded(rng, 512, 512)
+    layers = [("pruned90_512x512", _pruned(rng, 512, 512, 0.90), None),
+              # banded wins for v3 only after the compiler's plane-level
+              # row clustering — serve the layout serving would see
+              ("banded_reordered_512x512", wb,
+               plan_row_permutation(wb, window=3, level="plane"))]
+    rows: List[Row] = []
+    saved = os.environ.get("SME_DECODE_KERNEL")
+    try:
+        for lname, w, perm in layers:
+            k, n = w.shape
+            smew = sme_compress(w, squeeze=1, squeeze_max=7, row_perm=perm)
+            bpw = {
+                "xla": 9.06 / 8,
+                "v1": smew.storage_bits_per_weight("bytecode") / 8,
+                "v2": smew.storage_bits_per_weight("minifloat6") / 8,
+                "v3": smew.storage_bits_per_weight("plane_csc") / 8,
+            }
+            bpw["v3-decode"] = bpw["v3"]      # same operands, reshaped grid
+            for label, b in bpw.items():
+                rows.append((f"decode_gemv/{lname}/{label}/bytes_per_token",
+                             round(b * w.size, 1),
+                             f"{b:.4f} B/weight modeled HBM payload"))
+            if not (bpw["v3"] < bpw["v2"]):
+                raise RuntimeError(
+                    f"decode-shaped v3 must move strictly fewer modeled "
+                    f"bytes/token than v2 on {lname}: "
+                    f"{bpw['v3']:.4f} vs {bpw['v2']:.4f} B/weight")
+            params = {
+                name: {key: jnp.asarray(v) for key, v in pack_sme_param(
+                    w, squeeze=1, squeeze_max=7, row_perm=perm,
+                    backend=None if name == "xla" else name).items()}
+                for name in ("xla", "v1", "v2", "v3")
+            }
+            for m in (1, 8, 32):
+                x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+                for label in ("xla", "v1", "v2", "v3", "v3-decode"):
+                    name = "v3" if label == "v3-decode" else label
+                    os.environ["SME_DECODE_KERNEL"] = \
+                        "on" if label == "v3-decode" else "off"
+                    dt = _time_us(
+                        lambda a, nm=name: B.sme_apply(a, params[nm], nm), x)
+                    rows.append(
+                        (f"decode_gemv/{lname}/{label}/m{m}/interpret_us",
+                         round(dt, 1), "CPU interpret-mode walltime"))
+    finally:
+        if saved is None:
+            os.environ.pop("SME_DECODE_KERNEL", None)
+        else:
+            os.environ["SME_DECODE_KERNEL"] = saved
+    return rows
+
+
+def bench_autotune_sweep() -> List[Row]:
+    """Populate the measured-timing autotune cache (DESIGN.md §8): sweep
+    kernel backends x block sizes on a decode-shaped call, record observed
+    us/call into an ``AutotuneCache`` JSON, and report what the planner
+    does with it — the chosen (backend, bm) with the cache vs without.
+
+    The cache path comes from ``SME_AUTOTUNE_CACHE`` (else
+    ``BENCH_autotune_cache.json`` in the CWD); CI publishes it as an
+    artifact.  Off-TPU the device key carries ``-interpret``, so these
+    CPU smoke timings can never steer a real TPU serve.
+    """
+    import os
+
+    from repro.compiler.plan import plan_model
+    from repro.core import backend as B
+    from repro.core.integrate import pack_sme_param
+    from repro.hardware.autotune import AutotuneCache, TuneKey, device_kind
+
+    rng = np.random.default_rng(9)
+    k = n = 256
+    w = _pruned(rng, k, n, 0.85)
+    x = jnp.asarray(rng.normal(0, 1, (1, k)), jnp.float32)
+    path = os.environ.get("SME_AUTOTUNE_CACHE", "BENCH_autotune_cache.json")
+    cache = AutotuneCache(path)
+    dev = device_kind()
+    rows: List[Row] = []
+    for name in ("v1", "v2", "v3"):
+        p = {key: jnp.asarray(v) for key, v in
+             pack_sme_param(w, squeeze=1, backend=name).items()}
+        for bm in (64, 128, 256):
+            dt = _time_us(
+                lambda a, nm=name, b=bm: B.sme_apply(a, p, nm, bm=b), x)
+            cache.record(TuneKey(name, 1, k, n, bm, dev), dt)
+            rows.append((f"autotune/{name}/bm{bm}/us_per_call",
+                         round(dt, 1), f"m=1 decode shape, {dev}"))
+        best = cache.best(name, 1, k, n)
+        rows.append((f"autotune/{name}/best_bm", best[0],
+                     f"{best[1]['tokens_per_s']:.0f} tokens/s measured"))
+    cache.save()
+    rows.append(("autotune/cache_entries", len(cache.entries), path))
+    tree = {"layer": {"w": w}}
+    lp0 = plan_model(tree, autotune=AutotuneCache()).layers["layer/w"]
+    lp1 = plan_model(tree, autotune=cache).layers["layer/w"]
+    rows.append(("autotune/plan_no_cache",
+                 0, f"backend={lp0.backend} bm={lp0.bm} (analytic prices)"))
+    rows.append(("autotune/plan_with_cache",
+                 1, f"backend={lp1.backend} bm={lp1.bm} (measured prices)"))
     return rows
 
 
@@ -348,5 +521,6 @@ def bench_shard_matrix() -> List[Row]:
 
 
 ALL = [bench_sme_spmm_numerics, bench_plane_occupancy,
-       bench_decode_bandwidth_model, bench_dense_vs_sme_xla,
+       bench_decode_bandwidth_model, bench_decode_gemv,
+       bench_autotune_sweep, bench_dense_vs_sme_xla,
        bench_backend_matrix, bench_artifact_io, bench_shard_matrix]

@@ -3,11 +3,32 @@
 Prints ``name,us_per_call,derived`` CSV per the repo convention: the first
 column is the metric name, the second the metric value (or wall-us where a
 timing), the third context/derivation.
+
+Alongside the CSV, every run writes a machine-readable
+``BENCH_kernels.json`` (``{"version": 1, "suites": {suite: [{"name",
+"value", "derived"}]}}``) so CI jobs and the autotune tooling can consume
+results without parsing stdout; failed suites appear under ``"errors"``
+and still fail the process.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+JSON_OUT = "BENCH_kernels.json"
+
+
+def _jsonable(v):
+    # benchmark rows may carry numpy scalars; the JSON sidecar wants plain
+    # python numbers (fall back to str for anything exotic)
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return v
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
 
 
 def main() -> None:
@@ -24,6 +45,7 @@ def main() -> None:
             sys.exit(2)
     print("name,value,derived")
     failures = 0
+    doc = {"version": 1, "suites": {}, "errors": {}}
     for fn in suites:
         t0 = time.time()
         try:
@@ -31,10 +53,19 @@ def main() -> None:
         except Exception as e:  # keep the suite running
             failures += 1
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            doc["errors"][fn.__name__] = f"{type(e).__name__}: {e}"
             continue
         for name, value, ctx in rows:
             print(f"{name},{value},{ctx}")
         print(f"_timing/{fn.__name__}_s,{time.time()-t0:.1f},wall")
+        doc["suites"][fn.__name__] = [
+            {"name": n, "value": _jsonable(v), "derived": str(c)}
+            for n, v, c in rows]
+    out = os.environ.get("SME_BENCH_JSON", JSON_OUT)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"wrote {out} ({len(doc['suites'])} suites, "
+          f"{len(doc['errors'])} errors)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -39,7 +39,7 @@ from repro.core.squeeze import squeeze_error_bound
 __all__ = ["Candidate", "LayerPlan", "CompilePlan", "plan_model",
            "DEFAULT_CANDIDATES", "candidate_error_bound"]
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
 
 #: (n_bits, window, squeeze[, squeeze_max]) grid searched per layer.  All
 #: stay within the uint8 code dtype; squeeze>=1 / window<=3 rows are
@@ -116,6 +116,7 @@ class LayerPlan:
     squeeze_max: int = 0           # per-tile squeeze cap (0 = global only)
     reorder_level: str = "tile"    # signature the permutation clusters on
     occupied_plane_tiles: int = 0  # plane-CSC entries (v3 DMA units)
+    bm: int = 0                    # measured-best M block size (0 = default)
 
     @property
     def n_weights(self) -> int:
@@ -201,13 +202,17 @@ class CompilePlan:
 # candidate evaluation
 # --------------------------------------------------------------------------
 def _pick_backend(backend: Optional[str], n_bits: int, window: int,
-                  squeeze: int, smew=None) -> Optional[str]:
+                  squeeze: int, smew=None, shape=None,
+                  autotune=None) -> Optional[str]:
     """Which operand set a setting serves through.
 
     ``auto`` with a trial-compressed ``smew`` prices the actual occupancy:
     v3 (plane-CSC) wins whenever its measured bytes/weight undercut the
     eligible tile-CSC formats — per-plane occupancy is exactly what the
-    trial knows and the analytic path cannot.
+    trial knows and the analytic path cannot.  When an autotune cache
+    holds *measured* decode throughput for this shape, observed tokens/s
+    overrides the byte ranking entirely — bytes are a prior, the
+    measurement is the fact (DESIGN.md §8).
     """
     if backend in (None, "xla"):
         return None
@@ -221,6 +226,13 @@ def _pick_backend(backend: Optional[str], n_bits: int, window: int,
             if v2_ok:
                 by_bytes["v2"] = _storage_bytes_per_weight(smew, "v2")
             best = min(by_bytes, key=by_bytes.get)
+        if autotune is not None and shape is not None:
+            cands = ("v1", "v2", "v3") if v2_ok else ("v1", "v3")
+            measured = {b: t for b in cands
+                        if (t := autotune.measured_tokens_per_s(
+                            b, 1, shape[0], shape[1])) is not None}
+            if measured:
+                best = max(measured, key=measured.get)
         return best
     if backend == "v2" and not v2_ok:
         return "v1"
@@ -235,8 +247,8 @@ def _storage_bytes_per_weight(smew, backend: Optional[str]) -> float:
 
 def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
                     tile, backend: Optional[str], reorder_gain: int = 0,
-                    squeeze_max: int = 0,
-                    plane_reorder_gain: int = 0) -> Candidate:
+                    squeeze_max: int = 0, plane_reorder_gain: int = 0,
+                    autotune=None) -> Candidate:
     from repro.core.sme import sme_compress
     smew = sme_compress(w2d, n_bits=n_bits, window=window, squeeze=squeeze,
                         tile=tile, squeeze_max=squeeze_max or None)
@@ -244,7 +256,8 @@ def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
     # across layers regardless of their magnitude
     err = float(np.linalg.norm(smew.dequant() - w2d)
                 / max(np.linalg.norm(w2d), 1e-12))
-    be = _pick_backend(backend, n_bits, window, squeeze, smew=smew)
+    be = _pick_backend(backend, n_bits, window, squeeze, smew=smew,
+                       shape=w2d.shape, autotune=autotune)
     return Candidate(
         n_bits=n_bits, window=window, squeeze=squeeze, error=err,
         bytes_per_weight=_storage_bytes_per_weight(smew, be),
@@ -255,17 +268,18 @@ def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
 
 
 def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
-                       tile, backend: Optional[str],
-                       squeeze_max: int = 0) -> Candidate:
+                       tile, backend: Optional[str], squeeze_max: int = 0,
+                       autotune=None) -> Candidate:
     """Shape-only evaluation (dry-run / abstract trees): occupancy unknown,
     assume all live planes occupied — a pessimistic crossbar count and an
     exact byte count for the dense-tile worst case.  The all-planes-dense
     assumption means v3 never wins analytically; plane-CSC pricing needs
-    the trial measure."""
+    the trial measure (or a measured autotune entry)."""
     k, n = shape
     nr, nc = -(-k // tile[0]), -(-n // tile[1])
     live = n_bits - squeeze
-    be = _pick_backend(backend, n_bits, window, squeeze)
+    be = _pick_backend(backend, n_bits, window, squeeze, shape=shape,
+                       autotune=autotune)
     tiles = nr * nc
     if be == "v2":
         bits = (tiles * tile[0] * tile[1] * 6 + tiles * (tile[0] * 8 + 32)) \
@@ -284,13 +298,28 @@ def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
         plane_tiles=tiles * live)
 
 
-def _candidate_cost(c: Candidate, n_weights: int, objective: str) -> float:
-    """Scalar cost the greedy minimizes, via the hardware models."""
+def _candidate_cost(c: Candidate, n_weights: int, objective: str,
+                    shape=None, autotune=None) -> float:
+    """Scalar cost the greedy minimizes, via the hardware models.
+
+    Under ``objective="bytes"`` the analytic price is HBM traffic per
+    decoded token over the roofline bandwidth — seconds/token.  When an
+    autotune cache holds a *measured* decode entry for this candidate's
+    (backend, shape), the measured seconds/token replaces the analytic
+    price (same unit, observed instead of modeled).  Measured prices are
+    per (backend, shape): candidates sharing a backend tie, and ties
+    never upgrade — the cache steers the backend/block-size choice while
+    the analytic model keeps ordering squeeze depths within one backend.
+    """
     if objective == "energy":
         from repro.hardware.reram_model import LayerMapping, ReRAMConfig, energy_nj
         m = LayerMapping(name="", crossbars=max(c.crossbars, 1),
                          input_bits=c.n_bits + c.squeeze, activations=1)
         return energy_nj(ReRAMConfig(), [m])
+    if autotune is not None and shape is not None and c.backend:
+        tps = autotune.measured_tokens_per_s(c.backend, 1, shape[0], shape[1])
+        if tps:
+            return 1.0 / tps
     # "bytes": HBM traffic per decoded token -> seconds on the TPU roofline
     from repro.hardware.tpu_model import V5E
     return c.bytes_per_weight * n_weights / V5E.hbm_bw
@@ -328,7 +357,8 @@ def plan_model(params, error_budget: float = 0.05,
                candidates: Sequence[Tuple[int, int, int]] = DEFAULT_CANDIDATES,
                tile: Tuple[int, int] = (128, 128), measure: str = "trial",
                predicate=None, backend: Optional[str] = "auto",
-               reorder: bool = True, objective: str = "bytes") -> CompilePlan:
+               reorder: bool = True, objective: str = "bytes",
+               autotune=None) -> CompilePlan:
     """Search per-layer settings under a global accuracy budget.
 
     ``error_budget`` caps the weight-count-weighted mean per-layer error
@@ -353,9 +383,19 @@ def plan_model(params, error_budget: float = 0.05,
     and expert slices share an init/training distribution, but a leaf
     whose slice 0 is atypically compressible can understate the leaf's
     true error; tighten ``error_budget`` if experts are known to diverge.
+
+    ``autotune`` (an :class:`repro.hardware.autotune.AutotuneCache`, or
+    the process-wide active cache when ``None``) supplies *measured*
+    decode throughput: candidates whose (backend, shape) was swept price
+    by observed seconds/token instead of the analytic byte model, and the
+    chosen layer records the best-measured ``bm`` so serving dispatches
+    with it (DESIGN.md §8).
     """
     if measure not in ("trial", "analytic"):
         raise ValueError(f"measure must be 'trial'|'analytic', got {measure!r}")
+    if autotune is None:
+        from repro.hardware.autotune import get_cache
+        autotune = get_cache()
     predicate = predicate or _default_eligible
     from repro.core.mapping import conventional_crossbar_total
 
@@ -389,10 +429,11 @@ def plan_model(params, error_budget: float = 0.05,
                                     reorder_gain=gains.get((nb, win), 0),
                                     squeeze_max=sq_max,
                                     plane_reorder_gain=pgains.get(
-                                        (nb, win), 0))
+                                        (nb, win), 0),
+                                    autotune=autotune)
             else:
                 c = _evaluate_analytic(shape2d, nb, win, sq, tile, backend,
-                                       squeeze_max=sq_max)
+                                       squeeze_max=sq_max, autotune=autotune)
             cands.append(c)
         # error/bytes frontier: drop candidates dominated on both axes
         cands.sort(key=lambda c: (c.error, c.bytes_per_weight))
@@ -421,7 +462,8 @@ def plan_model(params, error_budget: float = 0.05,
         for key, frontier in per_layer.items():
             i = choice[key]
             nw = meta[key][0][0] * meta[key][0][1] * meta[key][1]
-            cur_cost = _candidate_cost(frontier[i], nw, objective)
+            cur_cost = _candidate_cost(frontier[i], nw, objective,
+                                       shape=meta[key][0], autotune=autotune)
             # scan the whole remaining frontier, not just i+1: under the
             # "energy" objective cost is not monotone along the
             # bytes-sorted frontier, so a cheaper candidate may sit past
@@ -430,7 +472,8 @@ def plan_model(params, error_budget: float = 0.05,
                 if (key, j) in blocked:
                     continue
                 nxt = frontier[j]
-                d_cost = cur_cost - _candidate_cost(nxt, nw, objective)
+                d_cost = cur_cost - _candidate_cost(
+                    nxt, nw, objective, shape=meta[key][0], autotune=autotune)
                 if d_cost <= 0:
                     continue
                 d_err = max((nxt.error - frontier[i].error) * nw
@@ -459,6 +502,11 @@ def plan_model(params, error_budget: float = 0.05,
             level, gain = "plane", c.plane_reorder_gain
         else:
             level, gain = "tile", c.reorder_gain
+        bm = 0
+        if autotune is not None and c.backend:
+            hit = autotune.best(c.backend, 1, shape2d[0], shape2d[1])
+            if hit is not None:
+                bm = hit[0]
         layers[key] = LayerPlan(
             path=key, shape=shape2d, n_slices=n_slices,
             n_bits=c.n_bits, window=c.window, squeeze=c.squeeze,
@@ -482,6 +530,7 @@ def plan_model(params, error_budget: float = 0.05,
             occupied_plane_tiles=c.plane_tiles
             - (max(c.plane_reorder_gain, 0) if (level == "plane"
                                                 and gain > 0) else 0),
+            bm=bm,
         )
     return CompilePlan(layers=layers, tile=tile, error_budget=error_budget,
                        objective=objective)

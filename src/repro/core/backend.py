@@ -55,10 +55,10 @@ _TILESQ_KEY = "sme_tilesq"
 
 __all__ = [
     "SMEBackend", "register_backend", "get_backend", "available_backends",
-    "default_backend", "set_default_backend", "use_backend",
-    "resolve_backend", "sme_apply", "smeweight_from_param",
-    "pack_param_operands", "operand_keys", "ensure_operands",
-    "clear_operand_cache",
+    "default_backend", "set_default_backend", "use_backend", "use_block",
+    "resolve_backend", "resolve_block_m", "sme_apply",
+    "smeweight_from_param", "pack_param_operands", "operand_keys",
+    "ensure_operands", "clear_operand_cache",
 ]
 
 _META_DEFAULTS = {"sme_nbits": 8, "sme_squeezed": 1, "sme_window": 3}
@@ -138,6 +138,15 @@ class SMEBackend:
         occupied tiles per column; plane-CSC counts (plane, tile) pairs."""
         return max(int(smew.occupancy.sum(axis=0).max()), 1)
 
+    def pack_block_key(self, bm: int):
+        """Part of the operand-cache key that depends on the block-size
+        choice.  The stock backends pack 128x128 weight tiles regardless
+        of ``bm`` (only x/out padding changes), so they return ``None`` —
+        one cache entry serves every bm.  A backend whose ``pack_weight``
+        layout depends on the block size must return a value that changes
+        with it, so a new bm repacks instead of serving stale operands."""
+        return None
+
     # -- run time ----------------------------------------------------------
     def matmul2d(self, x2d: jax.Array, ops: Dict[str, jax.Array],
                  param: dict, *, bm: int = 128,
@@ -215,6 +224,52 @@ def use_backend(name: Optional[str]):
         yield
     finally:
         _backend_stack.pop()
+
+
+# -------------------------------------------------------- block-size default
+# scoped bm override (mirrors the use_backend stack); None = unset
+_block_stack: list = [None]
+
+
+@contextlib.contextmanager
+def use_block(bm: Optional[int]):
+    """Scoped M-block-size default for every ``sme_apply`` underneath:
+    ``with use_block(256): engine.step(...)``.  ``None`` is a no-op so
+    call sites can thread an optional knob without branching."""
+    if bm is None:
+        yield
+        return
+    _block_stack.append(int(bm))
+    try:
+        yield
+    finally:
+        _block_stack.pop()
+
+
+def resolve_block_m(backend_name: Optional[str] = None,
+                    m: Optional[int] = None, k: Optional[int] = None,
+                    n: Optional[int] = None) -> int:
+    """Pick the M block size for one dispatch: ``use_block`` context >
+    autotune-cache best (measured sweeps, when a cache is active and holds
+    an entry for this backend x shape) > ``SME_BM`` env > 128.
+
+    All inputs are static python ints (array *shapes*), so consulting the
+    cache is trace-safe — the choice bakes into the jitted program just
+    like the hardcoded 128 used to.
+    """
+    if _block_stack[-1] is not None:
+        return _block_stack[-1]
+    if backend_name and m and k and n:
+        from repro.hardware.autotune import get_cache
+        cache = get_cache()
+        if cache is not None:
+            best = cache.best(backend_name, m, k, n)
+            if best is not None:
+                return best[0]
+    env = os.environ.get("SME_BM", "")
+    if env.isdigit() and int(env) > 0:
+        return int(env)
+    return 128
 
 
 def _v2_eligible(param: dict) -> bool:
@@ -319,17 +374,20 @@ def ensure_operands(params, backend_name: str, place=None):
 
 # weight identity -> packed operands; validated by weakref so a recycled
 # id() can never alias a dead weight, and evicted by the weakref callback
-# when the weight dies so operand arrays don't outlive their weight
-_OPERAND_CACHE: Dict[Tuple[str, int], Tuple[object, Dict[str, jax.Array]]] = {}
+# when the weight dies so operand arrays don't outlive their weight.  The
+# key carries the backend's pack_block_key(bm) so a block-size choice that
+# changes the packed layout/padding invalidates instead of aliasing.
+_OPERAND_CACHE: Dict[tuple, Tuple[object, Dict[str, jax.Array]]] = {}
 
 
 def clear_operand_cache() -> None:
     _OPERAND_CACHE.clear()
 
 
-def _cached_operands(param: dict, backend: SMEBackend) -> Dict[str, jax.Array]:
+def _cached_operands(param: dict, backend: SMEBackend,
+                     bm: int = 128) -> Dict[str, jax.Array]:
     anchor = param["sme_codes"]
-    key = (backend.name, id(anchor))
+    key = (backend.name, backend.pack_block_key(bm), id(anchor))
     hit = _OPERAND_CACHE.get(key)
     if hit is not None and hit[0]() is anchor:
         return hit[1]
@@ -487,6 +545,54 @@ def _v3_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
     return y[:m, :n] * scale * qscale
 
 
+def _use_decode_kernel(m: int, bm: int) -> bool:
+    """Shape-dispatch rule for the v3 decode path (``SME_DECODE_KERNEL``):
+    ``off``/``0`` never, ``on``/``1`` whenever the whole batch fits one M
+    tile, ``auto`` (default) when M is at most half a tile — i.e. the
+    matmul grid would waste most of its padded M rows.  Read at trace
+    time, like backend resolution."""
+    mode = os.environ.get("SME_DECODE_KERNEL", "auto").lower()
+    if mode in ("off", "0", "never"):
+        return False
+    if mode in ("on", "1", "always"):
+        return m <= bm
+    return 2 * m <= bm
+
+
+def _static_group_bound(last, nnz) -> Optional[int]:
+    """Tight static tile-group grid bound from concrete v3 operands (max
+    groups over columns); ``None`` when traced — the kernel then uses its
+    always-safe ``G = L`` bound and skips the padded steps at run time."""
+    if not (_is_concrete(last) and _is_concrete(nnz)):
+        return None
+    la = np.asarray(last)
+    valid = np.arange(la.shape[-1])[None, :] < np.asarray(nnz)[:, None]
+    return max(int(((la == 1) & valid).sum(axis=-1).max()), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "G", "interpret"))
+def _v3_decode_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
+                    scale, qscale, *, n, G, interpret):
+    from repro.kernels.sme_spmm.sme_spmm_planes_decode import \
+        sme_spmm_planes_decode
+    m, k = x2d.shape
+    nt, _, bk8, bn = planes.shape
+    bk = bk8 * 8
+    nr = -(-k // bk)
+    mp = -(-max(m, 8) // 8) * 8
+    xp = jnp.zeros((mp, nr * bk), x2d.dtype).at[:m, :k].set(x2d)
+    # the fused epilogue needs scale * 2^-n_bits per padded output column;
+    # qscale is an exact power of two, so folding it here is bitwise equal
+    # to the matmul path's external (y * scale) * qscale
+    colscale = jnp.zeros((nt * bn,), jnp.float32).at[:n].set(
+        scale.reshape(-1).astype(jnp.float32) * qscale)
+    y = sme_spmm_planes_decode(xp, planes, sign, rowscale,
+                               colscale.reshape(nt, bn), rowid, shift,
+                               last, nnz, G=G, out_dtype=jnp.float32,
+                               interpret=interpret)
+    return y[:m, :n]
+
+
 @register_backend
 class SpmmV3Backend(SMEBackend):
     """``sme_spmm_planes`` kernel: per-(plane, tile) 1-bit bitmaps with a
@@ -508,6 +614,16 @@ class SpmmV3Backend(SMEBackend):
         n = _param_kn(param)[1]
         scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
         nbits = jnp.asarray(param.get("sme_nbits", 8), jnp.float32)
+        if _use_decode_kernel(x2d.shape[0], bm):
+            # GEMV-shaped batch: tile-group grid + double-buffered bitmap
+            # DMA + fused epilogue (sme_spmm_planes_decode); bit-identical
+            # to the matmul grid below
+            return _v3_decode_call(
+                x2d, ops["planes"], ops["sign"], ops["rowscale"],
+                ops["rowid"], ops["shift"], ops["last"], ops["nnz"],
+                scale, jnp.exp2(-nbits), n=n,
+                G=_static_group_bound(ops["last"], ops["nnz"]),
+                interpret=bool(interpret))
         return _v3_call(x2d, ops["planes"], ops["sign"], ops["rowscale"],
                         ops["rowid"], ops["shift"], ops["last"], ops["nnz"],
                         scale, jnp.exp2(-nbits),
@@ -528,7 +644,7 @@ def _constrain_features(y: jax.Array) -> jax.Array:
 
 
 def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
-              *, out_dtype=None, bm: int = 128,
+              *, out_dtype=None, bm: Optional[int] = None,
               interpret: Optional[bool] = None) -> jax.Array:
     """y = x @ W_eff for an SME-packed param dict; x: [..., K] -> [..., N].
 
@@ -538,18 +654,27 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
     call (the grids differ only in the nnz prefetch values, so they share
     one compiled program).  Under an active ShardPolicy (mesh serving) the
     result is constrained to the policy's output-feature sharding.
+
+    ``bm`` (the kernels' M block size) defaults through
+    :func:`resolve_block_m`: explicit arg > ``use_block`` context >
+    autotune-cache best for this (backend, shape) > ``SME_BM`` env > 128.
     """
     be = resolve_backend(param, backend)
     if out_dtype is None:
         out_dtype = x.dtype
     lead = _param_lead(param)
     k, n = _param_kn(param)
+    if bm is None:
+        m_rows = 1
+        for d in x.shape[len(lead):-1]:
+            m_rows *= int(d)
+        bm = resolve_block_m(be.name, m_rows, k, n)
     ops: Optional[Dict[str, jax.Array]] = None
     if be.OPERANDS:
         if be.has_operands(param):
             ops = be.operands_from_param(param)
         elif _is_concrete(param["sme_codes"]):
-            ops = _cached_operands(param, be)
+            ops = _cached_operands(param, be, bm)
         else:
             be = get_backend("xla")   # traced raw codes: cannot pack here
 

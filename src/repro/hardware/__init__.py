@@ -1,4 +1,6 @@
 """Hardware cost models: ReRAM (paper's currency) and TPU v5e (roofline)."""
 from .reram_model import ReRAMConfig, LayerMapping, energy_nj, area_mm2, cycles, summarize
 from .tpu_model import TPUSpec, V5E, roofline_terms, dominant_term, model_flops
+from .autotune import (TuneKey, AutotuneCache, device_kind, get_cache,
+                       set_cache, load_cache)
 from .hlo_analysis import shape_bytes, collective_bytes, cost_summary

@@ -1,0 +1,178 @@
+"""Measured-timing autotune cache (DESIGN.md §8).
+
+The analytic prices in :mod:`tpu_model` rank backends by modeled HBM
+bytes — a good prior, but blind to everything the model leaves out (grid
+overheads, DMA latency, splice-epilogue cost, interpret-mode quirks).
+This module closes the loop: ``benchmarks/kernel_bench.py`` sweeps record
+*measured* per-call times into a JSON cache keyed on
+
+    backend x operand shape (m, k, n) x block size (bm) x device kind
+
+and two consumers read them back:
+
+  * ``compiler/plan.py::_candidate_cost`` prices a candidate by measured
+    tokens/s when an entry for its (backend, shape) exists, falling back
+    to the analytic byte model otherwise — so the planner picks
+    (backend, block-size) pairs by observed throughput;
+  * ``core/backend.py::resolve_block_m`` defaults the kernel M block
+    size to the best-measured ``bm`` for the dispatch shape.
+
+The cache is opt-in: nothing touches disk unless ``set_cache`` is called
+or ``SME_AUTOTUNE_CACHE`` names a path.  Device kind is part of every key
+(with an ``-interpret`` suffix off-TPU), so CPU smoke timings can never
+masquerade as TPU measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, Optional, Tuple
+
+__all__ = ["TuneKey", "AutotuneCache", "device_kind", "get_cache",
+           "set_cache", "load_cache", "CACHE_VERSION"]
+
+CACHE_VERSION = 1
+
+
+def device_kind() -> str:
+    """Stable device identifier for cache keys: the jax device kind, with
+    ``-interpret`` appended off-TPU (where Pallas kernels run in interpret
+    mode and timings mean something entirely different)."""
+    import jax
+    kind = jax.devices()[0].device_kind.replace(" ", "-").lower()
+    if jax.default_backend() != "tpu":
+        kind += "-interpret"
+    return kind
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """One measured configuration: backend x shape x block size x device."""
+
+    backend: str
+    m: int
+    k: int
+    n: int
+    bm: int
+    device: str
+
+    def encode(self) -> str:
+        return (f"{self.backend}|m={self.m}|k={self.k}|n={self.n}"
+                f"|bm={self.bm}|dev={self.device}")
+
+    @staticmethod
+    def decode(s: str) -> "TuneKey":
+        parts = s.split("|")
+        kv = dict(p.split("=", 1) for p in parts[1:])
+        return TuneKey(backend=parts[0], m=int(kv["m"]), k=int(kv["k"]),
+                       n=int(kv["n"]), bm=int(kv["bm"]), device=kv["dev"])
+
+
+class AutotuneCache:
+    """In-memory view of the measured-timing store, JSON on disk.
+
+    ``entries`` maps ``TuneKey.encode()`` -> ``{"us_per_call": float,
+    "tokens_per_s": float}``.  tokens/s is the decode currency: M rows
+    per call over the measured wall time.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, Dict[str, float]] = {}
+
+    # -- persistence -------------------------------------------------------
+    @classmethod
+    def load(cls, path: str) -> "AutotuneCache":
+        cache = cls(path)
+        if os.path.exists(path):
+            with open(path) as f:
+                doc = json.load(f)
+            if doc.get("version") != CACHE_VERSION:
+                raise ValueError(
+                    f"autotune cache {path} has version "
+                    f"{doc.get('version')!r}, expected {CACHE_VERSION}")
+            cache.entries = dict(doc.get("entries", {}))
+        return cache
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("no path bound to this cache; pass one")
+        doc = {"version": CACHE_VERSION, "entries": self.entries}
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)       # atomic: readers never see a torn file
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self.path = path
+        return path
+
+    # -- recording / lookup ------------------------------------------------
+    def record(self, key: TuneKey, us_per_call: float) -> None:
+        self.entries[key.encode()] = {
+            "us_per_call": float(us_per_call),
+            "tokens_per_s": key.m / (float(us_per_call) * 1e-6),
+        }
+
+    def lookup(self, key: TuneKey) -> Optional[Dict[str, float]]:
+        return self.entries.get(key.encode())
+
+    def best(self, backend: str, m: int, k: int, n: int,
+             device: Optional[str] = None
+             ) -> Optional[Tuple[int, Dict[str, float]]]:
+        """Best-measured ``(bm, entry)`` for a (backend, shape) on this
+        device, by max tokens/s; ``None`` when nothing was measured."""
+        device = device or device_kind()
+        hits = []
+        for s, e in self.entries.items():
+            key = TuneKey.decode(s)
+            if (key.backend, key.m, key.k, key.n, key.device) == \
+                    (backend, m, k, n, device):
+                hits.append((key.bm, e))
+        if not hits:
+            return None
+        return max(hits, key=lambda h: h[1]["tokens_per_s"])
+
+    def measured_tokens_per_s(self, backend: str, m: int, k: int, n: int,
+                              device: Optional[str] = None
+                              ) -> Optional[float]:
+        hit = self.best(backend, m, k, n, device)
+        return None if hit is None else hit[1]["tokens_per_s"]
+
+
+# ------------------------------------------------------------ active cache
+_ACTIVE: Optional[AutotuneCache] = None
+_ENV_CHECKED = False
+
+
+def set_cache(cache: Optional[AutotuneCache]) -> None:
+    """Install (or clear, with ``None``) the process-wide active cache."""
+    global _ACTIVE, _ENV_CHECKED
+    _ACTIVE = cache
+    _ENV_CHECKED = True        # explicit choice wins over the env default
+
+
+def load_cache(path: str) -> AutotuneCache:
+    """Load + install a cache from ``path`` in one step."""
+    cache = AutotuneCache.load(path)
+    set_cache(cache)
+    return cache
+
+
+def get_cache() -> Optional[AutotuneCache]:
+    """The active cache, lazily loaded from ``SME_AUTOTUNE_CACHE`` the
+    first time; ``None`` when neither is set (no surprise disk IO)."""
+    global _ACTIVE, _ENV_CHECKED
+    if _ACTIVE is None and not _ENV_CHECKED:
+        _ENV_CHECKED = True
+        path = os.environ.get("SME_AUTOTUNE_CACHE")
+        if path:
+            _ACTIVE = AutotuneCache.load(path)
+    return _ACTIVE

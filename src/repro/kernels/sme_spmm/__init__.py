@@ -4,3 +4,4 @@ from .ops import (pack_operands, sme_linear, sme_linear_from_weight,
 from .sme_spmm import sme_spmm
 from .sme_spmm6 import sme_spmm6
 from .sme_spmm_planes import sme_spmm_planes
+from .sme_spmm_planes_decode import plane_group_index, sme_spmm_planes_decode

@@ -74,6 +74,10 @@ def main():
                          "operands offline and serve through the Pallas "
                          "block-sparse kernels (interpret mode off-TPU); "
                          "v3 is the plane-CSC format (DESIGN.md §2)")
+    ap.add_argument("--bm", type=int, default=None,
+                    help="kernel M block size override (threads through "
+                         "core.backend.use_block; default resolves via the "
+                         "autotune cache / SME_BM env / 128; DESIGN.md §8)")
     ap.add_argument("--mesh", default="1,1",
                     help="serving mesh as 'data,model' (e.g. 2,2); params "
                          "and slot caches shard across it with bit-"
@@ -109,6 +113,8 @@ def main():
                 f"(artifact vs flags): {bad}; pass the same --d-model/"
                 f"--d-ff/... the artifact was compiled with")
         kw = {} if args.backend == "auto" else {"backend": args.backend}
+        if args.bm is not None:
+            kw["bm"] = args.bm
         t0 = time.time()
         eng = ServeEngine.from_artifact(api, args.artifact, mesh=mesh,
                                         slots=args.slots, s_max=args.s_max,
@@ -135,7 +141,7 @@ def main():
             print(f"SME backend: {args.backend}")
         eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
                           backend=args.backend if args.sme else None,
-                          mesh=mesh)
+                          mesh=mesh, bm=args.bm)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

@@ -70,12 +70,17 @@ def _prompt_bucket(n: int, s_max: int) -> int:
 
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
-                 seed: int = 0, backend: Optional[str] = None, mesh=None):
+                 seed: int = 0, backend: Optional[str] = None, mesh=None,
+                 bm: Optional[int] = None):
         """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
         | "auto") for packed weights: every jitted prefill/decode call runs
         under ``core.backend.use_backend``, so serving goes through the
         Pallas block-sparse kernels on TPU (interpret-mode elsewhere)
         without touching model code.  None keeps the process default.
+
+        ``bm`` overrides the kernels' M block size the same way (traced
+        under ``core.backend.use_block``); None defers to the autotune
+        cache / ``SME_BM`` env / 128 default (DESIGN.md §8).
 
         ``mesh`` is a jax Mesh with ("data", "model") axes; None builds the
         degenerate 1x1 mesh — there is no unsharded code path."""
@@ -86,6 +91,7 @@ class ServeEngine:
         self.slots = slots
         self.s_max = s_max
         self.backend = backend
+        self.bm = bm
         self.plan = None          # CompilePlan when booted from_artifact
         self.cfg = api.cfg
         self.key = jax.random.key(seed)
@@ -208,19 +214,27 @@ class ServeEngine:
                       manifest.get("extra", {}).get("serve_backend"))
         if kw.get("backend") in ("v1", "v2", "v3"):
             params = ensure_operands(params, kw["backend"], place=place)
+        if plan is not None and "bm" not in kw:
+            # a plan built against an autotune cache records each layer's
+            # measured-best block size; when they agree, serve with it
+            bms = {lp.bm for lp in plan.layers.values()
+                   if getattr(lp, "bm", 0)}
+            if len(bms) == 1:
+                kw["bm"] = bms.pop()
         eng = cls(api, params, mesh=mesh, **kw)
         eng.plan = plan
         return eng
 
     def _scope(self):
         """Trace-time context for the jitted programs: the SME backend
-        choice, the engine's ShardPolicy (activation constraints + the
-        sme_apply output-feature constraint) and the mesh (so
-        PartitionSpec-based constraints resolve)."""
-        from repro.core.backend import use_backend
+        choice, the block-size override, the engine's ShardPolicy
+        (activation constraints + the sme_apply output-feature constraint)
+        and the mesh (so PartitionSpec-based constraints resolve)."""
+        from repro.core.backend import use_backend, use_block
         from repro.parallel.policy import use_policy
         stack = contextlib.ExitStack()
         stack.enter_context(use_backend(self.backend))
+        stack.enter_context(use_block(self.bm))
         stack.enter_context(use_policy(self.policy))
         stack.enter_context(self.mesh)
         return stack

@@ -1,0 +1,322 @@
+"""Decode-specialized plane-CSC GEMV kernel (v3-decode) + autotune cache:
+bit-identity to v1 across the settings grid, group-index derivation,
+shape dispatch, ServeEngine token identity, block-size resolution and
+operand-cache invalidation, autotune round trips, and planner price
+mixing (DESIGN.md §8)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backend as B
+from repro.core.integrate import convert_params_to_sme, pack_sme_param
+from repro.core.sme import sme_compress, sme_matmul_ref_np
+from repro.hardware.autotune import (
+    AutotuneCache, TuneKey, device_kind, set_cache,
+)
+from repro.kernels.sme_spmm import plane_group_index
+
+RNG = np.random.default_rng(31)
+
+
+@pytest.fixture(autouse=True)
+def _no_process_cache():
+    # keep the process-wide autotune cache out of every test's way (and
+    # restore the lazy env-probe state afterwards)
+    set_cache(None)
+    yield
+    set_cache(None)
+
+
+def _param(w, emit=None, **kw):
+    return {k: jnp.asarray(v)
+            for k, v in pack_sme_param(w, backend=emit, **kw).items()}
+
+
+def _decode_vs_v1(n_bits, window, squeeze, squeeze_max, seed, monkeypatch,
+                  m=5):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, (200, 150))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.5)] = 0.0
+    x = jnp.asarray(rng.normal(0, 1, (m, 200)), jnp.float32)
+    kw = dict(n_bits=n_bits, window=window, squeeze=squeeze,
+              squeeze_max=squeeze_max)
+    p = _param(w, **kw)
+    monkeypatch.setenv("SME_DECODE_KERNEL", "off")
+    y1 = np.asarray(B.sme_apply(x, p, "v1"), np.float64)
+    y3m = np.asarray(B.sme_apply(x, p, "v3"), np.float64)
+    monkeypatch.setenv("SME_DECODE_KERNEL", "on")
+    y3d = np.asarray(B.sme_apply(x, p, "v3"), np.float64)
+    # the GEMV-shaped grid walks the same (col, row, plane) CSC order and
+    # its fused colscale is an exact power-of-2 rescale, so the decode
+    # kernel is bit-identical to the matmul-shaped kernel and to v1
+    assert (y3d == y1).all(), "decode != v1"
+    assert (y3d == y3m).all(), "decode != v3 matmul path"
+    ref = sme_matmul_ref_np(np.asarray(x), sme_compress(w, **kw))
+    rel = np.abs(y3d - ref).max() / max(np.abs(ref).max(), 1e-9)
+    assert rel < 5e-5
+
+
+# ------------------------------------------------------- bit identity
+@pytest.mark.parametrize("n_bits,window,squeeze,squeeze_max", [
+    (8, 3, 0, None), (8, 3, 1, None), (8, 3, 2, None), (8, 2, 1, None),
+    (8, 4, 0, None), (6, 3, 1, None), (6, 2, 2, None),
+    (8, 3, 1, 7), (8, 2, 1, 6), (6, 3, 1, 5),
+])
+def test_decode_bit_identical_across_settings_grid(
+        n_bits, window, squeeze, squeeze_max, monkeypatch):
+    _decode_vs_v1(n_bits, window, squeeze, squeeze_max, seed=3,
+                  monkeypatch=monkeypatch)
+
+
+def test_decode_bit_identity_property(monkeypatch):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(n_bits=st.sampled_from([6, 8]),
+           window=st.integers(2, 4),
+           squeeze=st.integers(0, 2),
+           deepen=st.booleans(),
+           m=st.sampled_from([1, 3, 8]),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=12, deadline=None)
+    def prop(n_bits, window, squeeze, deepen, m, seed):
+        squeeze_max = n_bits - 2 if deepen and squeeze < n_bits - 2 else None
+        _decode_vs_v1(n_bits, window, squeeze, squeeze_max, seed,
+                      monkeypatch, m=m)
+
+    prop()
+
+
+def test_decode_stacked_moe_bit_identical(monkeypatch):
+    E, D, F = 3, 256, 128
+    wi = RNG.normal(0, 0.3, (E, D, F))
+    wi[:, ::3] = 0.0
+    p = convert_params_to_sme({"wi": wi}, squeeze=1, squeeze_max=6,
+                              backend="all")["wi"]
+    x = jnp.asarray(RNG.normal(0, 1, (E, 2, D)), jnp.float32)
+    monkeypatch.setenv("SME_DECODE_KERNEL", "off")
+    y1 = np.asarray(B.sme_apply(x, p, "v1"))
+    monkeypatch.setenv("SME_DECODE_KERNEL", "on")
+    yd = np.asarray(B.sme_apply(x, p, "v3"))
+    assert (yd == y1).all()
+
+
+def test_decode_eager_vs_jit_and_empty_column(monkeypatch):
+    monkeypatch.setenv("SME_DECODE_KERNEL", "on")
+    w = RNG.normal(0, 0.3, (512, 384))
+    w[:, :128] = 0.0                      # col tile with zero groups
+    w[128:384] = 0.0
+    p = _param(w, emit="v3")
+    x = jnp.asarray(RNG.normal(0, 1, (4, 512)), jnp.float32)
+    y_e = np.asarray(B.sme_apply(x, p, "v3"))
+    # under jit the operands are traced, the static group bound falls back
+    # to L, and the padded grid steps must be no-ops
+    y_j = np.asarray(jax.jit(lambda a, q: B.sme_apply(a, q, "v3"))(x, p))
+    assert (y_e == y_j).all()
+    assert (y_e[:, :128] == 0).all()
+
+
+def test_decode_dispatch_and_large_m_fallback(monkeypatch):
+    w = RNG.normal(0, 0.3, (256, 256))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.6)] = 0.0
+    p = _param(w, emit="v3")
+    assert B._use_decode_kernel(1, 128) and B._use_decode_kernel(64, 128)
+    assert not B._use_decode_kernel(65, 128)   # auto: 2*m <= bm
+    monkeypatch.setenv("SME_DECODE_KERNEL", "on")
+    assert B._use_decode_kernel(128, 128)
+    assert not B._use_decode_kernel(129, 128)  # m > bm: matmul grid
+    monkeypatch.setenv("SME_DECODE_KERNEL", "off")
+    assert not B._use_decode_kernel(1, 128)
+    # prefill-shaped M falls back to the matmul kernel and stays exact
+    monkeypatch.setenv("SME_DECODE_KERNEL", "on")
+    x = jnp.asarray(RNG.normal(0, 1, (192, 256)), jnp.float32)
+    yd = np.asarray(B.sme_apply(x, p, "v3"))
+    monkeypatch.setenv("SME_DECODE_KERNEL", "off")
+    y1 = np.asarray(B.sme_apply(x, p, "v1"))
+    assert (yd == y1).all()
+
+
+# ------------------------------------------------------- group index
+def test_plane_group_index_matches_reference():
+    w = RNG.normal(0, 0.3, (384, 256))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.7)] = 0.0
+    p = pack_sme_param(w, squeeze=1, squeeze_max=7, backend="v3")
+    rowid = np.asarray(p["sme_v3_rowid"])
+    last = np.asarray(p["sme_v3_last"])
+    nnz = np.asarray(p["sme_v3_nnz"])
+    nt, L = rowid.shape
+    # reference: walk each column's CSC list, cutting groups at last == 1
+    G = max(int(((last == 1)
+                 & (np.arange(L)[None, :] < nnz[:, None])).sum(1).max()), 1)
+    g_rowid, g_start, g_count, g_nnz = map(np.asarray, plane_group_index(
+        jnp.asarray(rowid), jnp.asarray(last), jnp.asarray(nnz), G))
+    for j in range(nt):
+        groups, s = [], 0
+        for i in range(int(nnz[j])):
+            if last[j, i] == 1:
+                groups.append((int(rowid[j, s]), s, i - s + 1))
+                s = i + 1
+        assert g_nnz[j] == len(groups), j
+        for g, (rid, start, count) in enumerate(groups):
+            assert (int(g_rowid[j, g]), int(g_start[j, g]),
+                    int(g_count[j, g])) == (rid, start, count), (j, g)
+        # padding groups never dispatch: count == 0 keeps the splice loop
+        # and DMA chain empty even though start is clamped into range
+        assert (g_count[j, len(groups):] == 0).all(), j
+
+
+# -------------------------------------------------- serve token identity
+def test_serve_tokens_identical_with_decode_kernel(monkeypatch):
+    from repro.configs import ARCHS, scale_down
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = scale_down(ARCHS["qwen1.5-0.5b"], d_model=128, d_ff=256,
+                     head_dim=32, n_heads=4, n_kv_heads=4, vocab=256,
+                     n_layers=1)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+    ps = convert_params_to_sme(params, squeeze=1, backend="v3")
+
+    def run(mode):
+        monkeypatch.setenv("SME_DECODE_KERNEL", mode)
+        eng = ServeEngine(api, ps, slots=2, s_max=32, backend="v3")
+        reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                        max_new_tokens=4) for i in range(3)]
+        stats = eng.run(reqs, max_steps=40)
+        assert stats["completed"] == 3
+        return [r.out_tokens for r in reqs]
+
+    assert run("on") == run("off")
+
+
+# ------------------------------------------------ block-size resolution
+def test_use_block_and_resolve_block_m_precedence(monkeypatch):
+    monkeypatch.delenv("SME_BM", raising=False)
+    assert B.resolve_block_m() == 128
+    monkeypatch.setenv("SME_BM", "192")
+    assert B.resolve_block_m() == 192
+    cache = AutotuneCache()
+    dev = device_kind()
+    cache.record(TuneKey("v3", 1, 256, 256, 256, dev), 10.0)
+    cache.record(TuneKey("v3", 1, 256, 256, 64, dev), 2.0)
+    set_cache(cache)
+    # measured best beats the env default; the context override beats both
+    assert B.resolve_block_m("v3", 1, 256, 256) == 64
+    with B.use_block(32):
+        assert B.resolve_block_m("v3", 1, 256, 256) == 32
+    assert B.resolve_block_m("v3", 1, 999, 256) == 192   # no entry -> env
+    with B.use_block(None):                              # explicit no-op
+        assert B.resolve_block_m("v3", 1, 256, 256) == 64
+
+
+def test_bm_threads_through_sme_apply_bitwise(monkeypatch):
+    w = RNG.normal(0, 0.3, (256, 256))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.6)] = 0.0
+    p = _param(w, emit="v3")
+    x = jnp.asarray(RNG.normal(0, 1, (8, 256)), jnp.float32)
+    monkeypatch.setenv("SME_DECODE_KERNEL", "off")
+    ys = [np.asarray(B.sme_apply(x, p, "v3", bm=bm)) for bm in (64, 128)]
+    with B.use_block(64):
+        ys.append(np.asarray(B.sme_apply(x, p, "v3")))
+    assert (ys[0] == ys[1]).all() and (ys[0] == ys[2]).all()
+
+
+def test_operand_cache_invalidates_on_block_dependent_packing():
+    calls = []
+
+    class BlockPackBackend(B.SpmmV1Backend):
+        # a backend whose packed layout depends on bm: the cache key must
+        # split on pack_block_key so a bm change cannot serve stale operands
+        def pack_block_key(self, bm):
+            return bm
+
+        def pack_weight(self, smew, pad_to=None):
+            calls.append(1)
+            return super().pack_weight(smew, pad_to=pad_to)
+
+    w = RNG.normal(0, 0.3, (256, 256))
+    p = _param(w, squeeze=1)
+    be = BlockPackBackend()
+    B._cached_operands(p, be, bm=64)
+    B._cached_operands(p, be, bm=64)
+    assert len(calls) == 1                  # same bm: cache hit
+    B._cached_operands(p, be, bm=128)
+    assert len(calls) == 2                  # bm change: repacked
+    # stock backends pack bm-independently and share one entry
+    stock = B.get_backend("v1")
+    assert stock.pack_block_key(64) is stock.pack_block_key(128) is None
+
+
+# ------------------------------------------------------- autotune cache
+def test_autotune_cache_roundtrip(tmp_path):
+    path = tmp_path / "tune.json"
+    cache = AutotuneCache(str(path))
+    key = TuneKey("v3", 1, 512, 512, 128, "cpu-interpret")
+    cache.record(key, 250.0)
+    cache.record(TuneKey("v3", 1, 512, 512, 64, "cpu-interpret"), 100.0)
+    cache.record(TuneKey("v3", 1, 512, 512, 64, "tpu-v5e"), 5.0)
+    cache.save()
+    back = AutotuneCache.load(str(path))
+    assert back.lookup(key) == cache.lookup(key)
+    assert back.lookup(key)["tokens_per_s"] == pytest.approx(1 / 250e-6)
+    # best is per device: the TPU entry never shadows the interpret one
+    bm, entry = back.best("v3", 1, 512, 512, device="cpu-interpret")
+    assert bm == 64 and entry["us_per_call"] == 100.0
+    assert back.best("v3", 1, 512, 512, device="tpu-v5e")[0] == 64
+    assert back.best("v1", 1, 512, 512, device="cpu-interpret") is None
+    assert TuneKey.decode(key.encode()) == key
+
+
+def test_autotune_cache_rejects_wrong_version(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 99, "entries": {}}')
+    with pytest.raises(ValueError, match="version"):
+        AutotuneCache.load(str(path))
+
+
+# --------------------------------------------------------- planner mixing
+def test_plan_model_prefers_measured_backend_and_bm():
+    from repro.compiler import plan_model
+
+    w = np.random.default_rng(5).normal(0, 0.05, (512, 512))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.9)] = 0.0
+    tree = {"pruned": {"w": w}}
+    kw = dict(error_budget=0.06,
+              predicate=lambda path, leaf: leaf.ndim == 2)
+    base = plan_model(tree, autotune=AutotuneCache(), **kw).layers["pruned/w"]
+    assert base.backend == "v3" and base.bm == 0   # analytic prices
+
+    dev = device_kind()
+    cache = AutotuneCache()
+    cache.record(TuneKey("v1", 1, 512, 512, 256, dev), 10.0)
+    cache.record(TuneKey("v3", 1, 512, 512, 128, dev), 500.0)
+    lp = plan_model(tree, autotune=cache, **kw).layers["pruned/w"]
+    # measured throughput flips the byte-ranked choice and pins the bm
+    assert lp.backend == "v1" and lp.bm == 256
+
+    cache2 = AutotuneCache()
+    cache2.record(TuneKey("v3", 1, 512, 512, 64, dev), 10.0)
+    cache2.record(TuneKey("v1", 1, 512, 512, 128, dev), 500.0)
+    lp2 = plan_model(tree, autotune=cache2, **kw).layers["pruned/w"]
+    assert lp2.backend == "v3" and lp2.bm == 64
+
+
+def test_plan_roundtrip_preserves_bm(tmp_path):
+    from repro.compiler.plan import CompilePlan, PLAN_VERSION, plan_model
+
+    assert PLAN_VERSION == 3
+    dev = device_kind()
+    cache = AutotuneCache()
+    cache.record(TuneKey("v3", 1, 384, 384, 64, dev), 5.0)
+    w = np.random.default_rng(5).normal(0, 0.05, (384, 384))
+    w[np.abs(w) < np.quantile(np.abs(w), 0.9)] = 0.0
+    plan = plan_model({"l": {"w": w}}, autotune=cache,
+                      predicate=lambda path, leaf: leaf.ndim == 2)
+    path = tmp_path / "plan.json"
+    path.write_text(plan.to_json())
+    back = CompilePlan.from_json(path.read_text())
+    lp = back.layers["l/w"]
+    assert lp.bm == plan.layers["l/w"].bm
+    assert lp.bm == (64 if lp.backend == "v3" else lp.bm)
