@@ -9,6 +9,12 @@ Alongside the CSV, every run writes a machine-readable
 "value", "derived"}]}}``) so CI jobs and the autotune tooling can consume
 results without parsing stdout; failed suites appear under ``"errors"``
 and still fail the process.
+
+Each suite row also carries its telemetry under ``"telemetry"``:
+wall-clock seconds plus the delta of the process metrics registry
+(``repro.obs``, DESIGN.md §9) across the suite — dispatch decisions,
+operand-cache traffic, autotune lookups — so ``BENCH_kernels.json``
+accumulates a per-PR perf trajectory, not just point values.
 """
 from __future__ import annotations
 
@@ -43,10 +49,13 @@ def main() -> None:
         if not suites:
             print(f"no benchmark matches {only}", file=sys.stderr)
             sys.exit(2)
+    from repro.obs import REGISTRY
+
     print("name,value,derived")
     failures = 0
-    doc = {"version": 1, "suites": {}, "errors": {}}
+    doc = {"version": 1, "suites": {}, "errors": {}, "telemetry": {}}
     for fn in suites:
+        flat0 = REGISTRY.flat_values()
         t0 = time.time()
         try:
             rows = fn()
@@ -55,12 +64,20 @@ def main() -> None:
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
             doc["errors"][fn.__name__] = f"{type(e).__name__}: {e}"
             continue
+        wall = time.time() - t0
         for name, value, ctx in rows:
             print(f"{name},{value},{ctx}")
-        print(f"_timing/{fn.__name__}_s,{time.time()-t0:.1f},wall")
+        print(f"_timing/{fn.__name__}_s,{wall:.1f},wall")
         doc["suites"][fn.__name__] = [
             {"name": n, "value": _jsonable(v), "derived": str(c)}
             for n, v, c in rows]
+        # metrics-registry delta across the suite: what the suite *did*
+        # (dispatches, cache traffic, packs) beside what it measured
+        flat1 = REGISTRY.flat_values()
+        delta = {k: round(v - flat0.get(k, 0.0), 9)
+                 for k, v in flat1.items() if v != flat0.get(k, 0.0)}
+        doc["telemetry"][fn.__name__] = {"wall_s": round(wall, 3),
+                                         "metrics_delta": delta}
     out = os.environ.get("SME_BENCH_JSON", JSON_OUT)
     with open(out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)

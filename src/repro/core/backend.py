@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import logging
 import os
 import weakref
 from typing import Dict, Optional, Tuple
@@ -49,7 +50,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from .sme import SMEWeight, csc_tile_order
+
+_LOG = logging.getLogger("repro.obs")
 
 _TILESQ_KEY = "sme_tilesq"
 
@@ -372,6 +376,104 @@ def ensure_operands(params, backend_name: str, place=None):
     return walk(params, [])
 
 
+# ----------------------------------------------------------------- telemetry
+# Dispatch hooks (DESIGN.md §9).  sme_apply runs at *trace time* inside
+# jitted programs, so these counters record dispatch/packing *decisions*
+# (one per traced call site, not per device execution) — which is exactly
+# what goes wrong silently: the wrong backend resolved, the decode kernel
+# falling back to the matmul grid, an operand repack storm.  All hooks are
+# plain python counters gated on obs.enabled(): with telemetry off the
+# cost is one branch, and either way nothing here can appear in the
+# lowered HLO (tested in tests/test_obs.py).
+
+def _obs_counter(name: str, help: str, labelnames: Tuple[str, ...]):
+    return obs.get_registry().counter(name, help, labelnames)
+
+
+def _obs_dispatch(backend_name: str, ops: Optional[Dict[str, jax.Array]],
+                  param: dict) -> None:
+    if not obs.enabled():
+        return
+    _obs_counter(
+        "sme_dispatch_total",
+        "sme_apply backend dispatch decisions (trace-time)",
+        ("backend",)).labels(backend=backend_name).inc()
+    arrs = ops if ops else {k: param[k] for k in
+                            ("sme_codes", "sme_sign", "sme_scale",
+                             "sme_rowexp") if k in param}
+    nbytes = 0
+    for v in arrs.values():
+        shape = getattr(v, "shape", None)
+        if shape is not None:
+            nbytes += int(np.prod(shape)) * np.dtype(v.dtype).itemsize
+    _obs_counter(
+        "sme_modeled_bytes_total",
+        "modeled HBM operand payload bytes per dispatch decision: the "
+        "packed arrays one call streams (plane-occupancy-priced for v3)",
+        ("backend",)).labels(backend=backend_name).inc(nbytes)
+
+
+def _obs_cache_event(event: str) -> None:
+    if not obs.enabled():
+        return
+    _obs_counter(
+        "sme_operand_cache_total",
+        "pack-once operand cache outcomes: prepacked = operands already "
+        "in the param dict, hit/miss = cache lookup, repack = a "
+        "block-size change forced a fresh pack of a known weight",
+        ("event",)).labels(event=event).inc()
+
+
+# (backend, id(weight)) -> [weakref, {block keys packed}, repack count]:
+# the thrash detector behind the repack counter.  Validated/evicted by
+# weakref exactly like _OPERAND_CACHE below.
+_PACK_HISTORY: Dict[Tuple[str, int], list] = {}
+
+
+def _obs_cache_miss(backend_name: str, anchor, block_key) -> None:
+    """Classify a pack as miss (first sight) or repack (same weight,
+    new block key) and warn once thrash sets in."""
+    if not obs.enabled():
+        return
+    hkey = (backend_name, id(anchor))
+    ent = _PACK_HISTORY.get(hkey)
+    if ent is not None and ent[0]() is not anchor:
+        ent = None                       # recycled id(): start fresh
+    event = "miss"
+    if ent is None:
+        try:
+            ref = weakref.ref(
+                anchor, lambda _, k=hkey: _PACK_HISTORY.pop(k, None))
+            _PACK_HISTORY[hkey] = [ref, {block_key}, 0]
+        except TypeError:
+            pass                         # non-weakrefable: count misses only
+    elif block_key not in ent[1]:
+        ent[1].add(block_key)
+        ent[2] += 1
+        event = "repack"
+        if ent[2] >= 2:
+            _LOG.warning(
+                "operand pack thrash: %s repacked weight id=%d %d times "
+                "(block keys seen: %s) — callers are alternating block "
+                "sizes whose packed layout differs; pin bm to stop "
+                "re-packing", backend_name, id(anchor), ent[2],
+                sorted(map(str, ent[1])))
+    _obs_cache_event(event)
+
+
+def _obs_decode_kernel(used_decode: bool) -> None:
+    if not obs.enabled():
+        return
+    mode = os.environ.get("SME_DECODE_KERNEL", "auto").lower()
+    _obs_counter(
+        "sme_decode_kernel_total",
+        "v3 shape-dispatch outcomes: path=decode is the GEMV tile-group "
+        "kernel, path=matmul the (M,Nt,L) grid; mode echoes "
+        "SME_DECODE_KERNEL at trace time",
+        ("mode", "path")).labels(
+            mode=mode, path="decode" if used_decode else "matmul").inc()
+
+
 # weight identity -> packed operands; validated by weakref so a recycled
 # id() can never alias a dead weight, and evicted by the weakref callback
 # when the weight dies so operand arrays don't outlive their weight.  The
@@ -387,10 +489,13 @@ def clear_operand_cache() -> None:
 def _cached_operands(param: dict, backend: SMEBackend,
                      bm: int = 128) -> Dict[str, jax.Array]:
     anchor = param["sme_codes"]
-    key = (backend.name, backend.pack_block_key(bm), id(anchor))
+    bkey = backend.pack_block_key(bm)
+    key = (backend.name, bkey, id(anchor))
     hit = _OPERAND_CACHE.get(key)
     if hit is not None and hit[0]() is anchor:
+        _obs_cache_event("hit")
         return hit[1]
+    _obs_cache_miss(backend.name, anchor, bkey)
     ops = pack_param_operands(param, backend)
     try:
         ref = weakref.ref(anchor, lambda _, k=key: _OPERAND_CACHE.pop(k, None))
@@ -614,7 +719,9 @@ class SpmmV3Backend(SMEBackend):
         n = _param_kn(param)[1]
         scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
         nbits = jnp.asarray(param.get("sme_nbits", 8), jnp.float32)
-        if _use_decode_kernel(x2d.shape[0], bm):
+        use_decode = _use_decode_kernel(x2d.shape[0], bm)
+        _obs_decode_kernel(use_decode)
+        if use_decode:
             # GEMV-shaped batch: tile-group grid + double-buffered bitmap
             # DMA + fused epilogue (sme_spmm_planes_decode); bit-identical
             # to the matmul grid below
@@ -672,11 +779,13 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
     ops: Optional[Dict[str, jax.Array]] = None
     if be.OPERANDS:
         if be.has_operands(param):
+            _obs_cache_event("prepacked")
             ops = be.operands_from_param(param)
         elif _is_concrete(param["sme_codes"]):
             ops = _cached_operands(param, be, bm)
         else:
             be = get_backend("xla")   # traced raw codes: cannot pack here
+    _obs_dispatch(be.name, ops, param)
 
     if "sme_perm" in param and be.OPERANDS:
         # compiler-reordered weight: kernel operands hold W[perm, :], so

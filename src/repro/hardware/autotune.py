@@ -30,10 +30,26 @@ import os
 import tempfile
 from typing import Dict, Optional, Tuple
 
+from repro import obs
+
 __all__ = ["TuneKey", "AutotuneCache", "device_kind", "get_cache",
            "set_cache", "load_cache", "CACHE_VERSION"]
 
 CACHE_VERSION = 1
+
+
+def _obs_event(event: str) -> None:
+    """Telemetry (DESIGN.md §9): cache consultation outcomes.  ``best``
+    lookups are trace-time (``resolve_block_m``), so counts are per
+    traced dispatch; ``stale`` fires when a version-mismatched cache file
+    is rejected at load."""
+    if not obs.enabled():
+        return
+    obs.get_registry().counter(
+        "autotune_cache_total",
+        "autotune cache outcomes: hit/miss on best-bm lookups "
+        "(trace-time), stale on version-rejected cache files",
+        ("event",)).labels(event=event).inc()
 
 
 def device_kind() -> str:
@@ -90,6 +106,7 @@ class AutotuneCache:
             with open(path) as f:
                 doc = json.load(f)
             if doc.get("version") != CACHE_VERSION:
+                _obs_event("stale")
                 raise ValueError(
                     f"autotune cache {path} has version "
                     f"{doc.get('version')!r}, expected {CACHE_VERSION}")
@@ -137,7 +154,9 @@ class AutotuneCache:
                     (backend, m, k, n, device):
                 hits.append((key.bm, e))
         if not hits:
+            _obs_event("miss")
             return None
+        _obs_event("hit")
         return max(hits, key=lambda h: h[1]["tokens_per_s"])
 
     def measured_tokens_per_s(self, backend: str, m: int, k: int, n: int,

@@ -14,8 +14,18 @@ and slot caches across a device mesh (bit-identical tokens to the default
 (translated into ``--xla_force_host_platform_device_count`` before the
 first jax import).
 
+Telemetry (DESIGN.md §9): ``--metrics-out m.json`` writes the process
+metrics snapshot on exit (TTFT/inter-token histograms, decode-step and
+dispatch counters — ``python -m repro.obs.gate m.json`` is the CI gate),
+``--trace-out t.jsonl`` (or ``t.json`` for Chrome/Perfetto) dumps the
+request-lifecycle trace ring, and ``--metrics-port N`` serves the live
+Prometheus text exposition at ``/metrics``.  All of it is host-side:
+tokens are bit-identical with telemetry on, off, or disabled via
+``SME_TELEMETRY=0``.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 6 --max-new 12 [--sme] [--squeeze 1]
+        --requests 6 --max-new 12 [--sme] [--squeeze 1] \
+        [--metrics-out m.json --trace-out t.jsonl --metrics-port 9090]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --d-model 256 --d-ff 512 --artifact qwen.smez
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
@@ -85,7 +95,28 @@ def main():
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N CPU host devices (must be first-init; "
                          "handled before the jax import above)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the process metrics snapshot (registry "
+                         "JSON; DESIGN.md §9) here on exit — CI gates on "
+                         "it via `python -m repro.obs.gate`")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle trace here on exit: "
+                         "*.jsonl = one span per line (lossless), *.json "
+                         "= Chrome/Perfetto trace_event (load at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=4096,
+                    help="trace ring-buffer capacity (oldest spans evict "
+                         "past this)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the Prometheus text exposition on this "
+                         "port at /metrics for the process lifetime "
+                         "(0 picks an ephemeral port)")
     args = ap.parse_args()
+
+    if args.metrics_port is not None:
+        from repro.obs.httpd import start_metrics_server
+        server, _ = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{server.server_port}/metrics")
 
     from repro.launch.mesh import make_serve_mesh
     mesh = make_serve_mesh(args.mesh)
@@ -115,6 +146,7 @@ def main():
         kw = {} if args.backend == "auto" else {"backend": args.backend}
         if args.bm is not None:
             kw["bm"] = args.bm
+        kw["trace_capacity"] = args.trace_capacity
         t0 = time.time()
         eng = ServeEngine.from_artifact(api, args.artifact, mesh=mesh,
                                         slots=args.slots, s_max=args.s_max,
@@ -141,7 +173,8 @@ def main():
             print(f"SME backend: {args.backend}")
         eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
                           backend=args.backend if args.sme else None,
-                          mesh=mesh, bm=args.bm)
+                          mesh=mesh, bm=args.bm,
+                          trace_capacity=args.trace_capacity)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -156,6 +189,19 @@ def main():
         print(f"req {r.rid}: prompt={list(r.prompt)} -> {r.out_tokens}")
     print(f"throughput: {stats['tokens'] / (time.time() - t0):.1f} tok/s "
           f"(CPU smoke)")
+
+    if args.metrics_out:
+        from repro.obs import write_snapshot
+        write_snapshot(args.metrics_out)
+        print(f"metrics snapshot: {args.metrics_out}")
+    if args.trace_out:
+        from repro.obs import export_jsonl, export_trace_event
+        if args.trace_out.endswith(".json"):
+            export_trace_event(eng.tracer.buffer, args.trace_out)
+        else:
+            export_jsonl(eng.tracer.buffer, args.trace_out)
+        print(f"trace ({len(eng.tracer.buffer)} spans, "
+              f"{eng.tracer.buffer.dropped} dropped): {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
 import time
 from typing import Dict, List, Optional
 
@@ -39,7 +40,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
+
 __all__ = ["Request", "ServeEngine", "PromptTooLong"]
+
+# engine label values for the process-wide metrics registry: each engine
+# instance gets its own label so per-engine series never mix (and the
+# engine's derived stats dict reads back only its own counters)
+_ENGINE_IDS = itertools.count()
+
+#: 0..1 deciles for occupancy/fraction histograms
+_FRACTION_BUCKETS = tuple(round(i / 10, 1) for i in range(1, 11))
 
 
 class PromptTooLong(ValueError):
@@ -71,7 +82,7 @@ def _prompt_bucket(n: int, s_max: int) -> int:
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
                  seed: int = 0, backend: Optional[str] = None, mesh=None,
-                 bm: Optional[int] = None):
+                 bm: Optional[int] = None, trace_capacity: int = 4096):
         """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
         | "auto") for packed weights: every jitted prefill/decode call runs
         under ``core.backend.use_backend``, so serving goes through the
@@ -83,7 +94,14 @@ class ServeEngine:
         cache / ``SME_BM`` env / 128 default (DESIGN.md §8).
 
         ``mesh`` is a jax Mesh with ("data", "model") axes; None builds the
-        degenerate 1x1 mesh — there is no unsharded code path."""
+        degenerate 1x1 mesh — there is no unsharded code path.
+
+        ``trace_capacity`` bounds the engine's request-lifecycle trace
+        ring (``self.tracer``, DESIGN.md §9): spans beyond it evict the
+        oldest.  All telemetry is host-side, recorded around the jitted
+        programs — tokens and lowered HLO are identical with it on or
+        off (tested), and ``repro.obs.set_enabled(False)`` reduces the
+        timing/tracing hooks to one branch."""
         from repro.parallel.policy import policy_for
         from repro.parallel.sharding import (cache_sharding, param_sharding,
                                              place_tree)
@@ -178,8 +196,64 @@ class ServeEngine:
             write_fn, in_shardings=(self.cache_sh, self._rep, self._rep,
                                     self._rep),
             out_shardings=self.cache_sh, donate_argnums=(0,))
-        self._stats = {"prefills": 0, "prefill_reqs": 0, "decode_steps": 0,
-                       "tokens": 0}
+
+        # -- telemetry (DESIGN.md §9) -----------------------------------
+        # Lifetime counters live in the process-wide registry under this
+        # engine's label and double as the engine's stats (the `_stats`
+        # property and run()'s returned dict derive from them — one
+        # source of truth), so they count unconditionally.  Latency
+        # histograms and trace spans are instrumentation only and check
+        # obs.enabled() at every hook.
+        self._eid = str(next(_ENGINE_IDS))
+        R = obs.get_registry()
+        eid = dict(engine=self._eid)
+        self._m_requests = R.counter(
+            "serve_requests_total",
+            "terminal request outcomes per engine",
+            ("engine", "outcome"))
+        self._m = {
+            "prefills": R.counter(
+                "serve_prefills_total", "batched prefill calls",
+                ("engine",)).labels(**eid),
+            "prefill_reqs": R.counter(
+                "serve_prefill_requests_total",
+                "requests admitted through batched prefill",
+                ("engine",)).labels(**eid),
+            "decode_steps": R.counter(
+                "serve_decode_steps_total",
+                "jitted decode steps (one per engine step)",
+                ("engine",)).labels(**eid),
+            "tokens": R.counter(
+                "serve_tokens_total", "decode tokens emitted",
+                ("engine",)).labels(**eid),
+            "ttft": R.histogram(
+                "serve_ttft_seconds",
+                "enqueue to first token (the prefill-sampled one)",
+                ("engine",)).labels(**eid),
+            "itl": R.histogram(
+                "serve_inter_token_seconds",
+                "per-request gap between consecutive decode tokens",
+                ("engine",)).labels(**eid),
+            "qwait": R.histogram(
+                "serve_queue_wait_seconds",
+                "enqueue to the start of the admitting prefill",
+                ("engine",)).labels(**eid),
+            "occupancy": R.histogram(
+                "serve_batch_occupancy",
+                "active slots / total slots, observed per decode step",
+                ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+            "padded": R.histogram(
+                "serve_padded_slot_fraction",
+                "free (padded) slots / total slots per decode step",
+                ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+            "pad_frac": R.histogram(
+                "serve_prefill_pad_fraction",
+                "padding fraction of each batched prefill call",
+                ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+        }
+        self.tracer = obs.Tracer(capacity=trace_capacity)
+        self._t_enq: Dict[int, float] = {}     # id(req) -> enqueue ts
+        self._last_tok_t = np.zeros(slots)     # last token ts per slot
 
     @classmethod
     def from_artifact(cls, api, path, *, verify: bool = False, mesh=None,
@@ -239,6 +313,34 @@ class ServeEngine:
         stack.enter_context(self.mesh)
         return stack
 
+    # ------------------------------------------------------------ telemetry
+    @property
+    def _stats(self) -> Dict[str, int]:
+        """Engine-lifetime stats, derived from the metrics registry (the
+        counters ARE the stats; kept as a dict for backward compat)."""
+        return {k: int(self._m[k].value)
+                for k in ("prefills", "prefill_reqs", "decode_steps",
+                          "tokens")}
+
+    def _outcome(self, outcome: str) -> None:
+        self._m_requests.labels(engine=self._eid, outcome=outcome).inc()
+
+    def _outcome_count(self, outcome: str) -> int:
+        return int(self._m_requests.labels(engine=self._eid,
+                                           outcome=outcome).value)
+
+    def _mark_enqueue(self, req: Request) -> None:
+        if obs.enabled() and id(req) not in self._t_enq:
+            self._t_enq[id(req)] = self.tracer.now()
+            self.tracer.event("enqueue", rid=req.rid,
+                              prompt_len=len(req.prompt))
+
+    def _reject(self, req: Request) -> None:
+        self._outcome("rejected")
+        self.tracer.event("reject", rid=req.rid,
+                          prompt_len=len(req.prompt))
+        self._t_enq.pop(id(req), None)
+
     # ---------------------------------------------------------------- slots
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):
@@ -270,7 +372,12 @@ class ServeEngine:
         free; raises PromptTooLong when the prompt cannot fit the cache
         ring. A request whose prefill-sampled token already satisfies
         eos/max_new_tokens completes immediately without taking a slot."""
-        self._prefill_len(req)
+        self._mark_enqueue(req)
+        try:
+            self._prefill_len(req)
+        except PromptTooLong:
+            self._reject(req)
+            raise
         if self._free_slot() is None:
             return False
         self._admit([req])
@@ -304,23 +411,46 @@ class ServeEngine:
         if self.cfg.n_enc_layers:
             batch["frames"] = jnp.zeros(
                 (b, max(max(tok_lens), 2), self.cfg.d_model), jnp.bfloat16)
+        tr = obs.enabled()
+        t_pf = self.tracer.now() if tr else 0.0
+        if tr:
+            # queue wait ends when the admitting prefill starts
+            for r in reqs:
+                tq = self._t_enq.get(id(r))
+                if tq is not None:
+                    self._m["qwait"].observe(t_pf - tq)
         with self._scope():
             if self._ragged_prefill:
                 logits, pre = self._prefill(self.params, batch,
                                             jnp.asarray(plens))
             else:
                 logits, pre = self._prefill(self.params, batch)
-        self._stats["prefills"] += 1
-        self._stats["prefill_reqs"] += b
+        self._m["prefills"].inc()
+        self._m["prefill_reqs"].inc(b)
+        if tr:
+            pad_frac = 1.0 - sum(tok_lens) / float(b * pad_to)
+            self._m["pad_frac"].observe(pad_frac)
+            self.tracer.span("prefill", t_pf, n_reqs=b, pad_to=pad_to,
+                             pad_fraction=round(pad_frac, 4),
+                             rids=[r.rid for r in reqs])
         temps = np.array([r.temperature for r in reqs], np.float32)
         first = self._sample(logits, temps)
+        t_first = self.tracer.now() if tr else 0.0
         for i, req in enumerate(reqs):
             tok = int(first[i])
             req.out_tokens.append(tok)
+            if tr:
+                tq = self._t_enq.get(id(req))
+                if tq is not None:
+                    self._m["ttft"].observe(t_first - tq)
+                self.tracer.event("admit", rid=req.rid, plen=int(plens[i]))
             # the prefill-sampled token can already satisfy the request
             if (req.eos_id is not None and tok == req.eos_id) or \
                     len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
+                self._outcome("completed")
+                self.tracer.event("finish", rid=req.rid, n_tokens=1)
+                self._t_enq.pop(id(req), None)
                 continue
             slot = self._free_slot()
             self.caches = self._write(self.caches, pre,
@@ -328,6 +458,7 @@ class ServeEngine:
             self.pos[slot] = plens[i]
             self.last_token[slot, 0] = tok
             self.active[slot] = req
+            self._last_tok_t[slot] = t_first
 
     # --------------------------------------------------------------- decode
     def step(self):
@@ -340,6 +471,8 @@ class ServeEngine:
         act = np.array([r is not None for r in self.active])
         if not act.any():
             return
+        tr = obs.enabled()
+        t_step = self.tracer.now() if tr else 0.0
         temps = np.array([r.temperature if r is not None else 0.0
                           for r in self.active], np.float32)
         self.key, sub = jax.random.split(self.key)
@@ -348,13 +481,23 @@ class ServeEngine:
                 self.params, jnp.asarray(self.last_token), self.caches,
                 jnp.asarray(self.pos), jnp.asarray(act),
                 jnp.asarray(temps), sub)
-        self._stats["decode_steps"] += 1
+        self._m["decode_steps"].inc()
         toks = np.asarray(toks)
+        if tr:
+            occ = float(act.mean())
+            self._m["occupancy"].observe(occ)
+            self._m["padded"].observe(1.0 - occ)
+        t_tok = self.tracer.now() if tr else 0.0
         for i in np.flatnonzero(act):
             req = self.active[i]
             tok = int(toks[i])
             req.out_tokens.append(tok)
-            self._stats["tokens"] += 1
+            self._m["tokens"].inc()
+            if tr:
+                self._m["itl"].observe(t_tok - self._last_tok_t[i])
+                self._last_tok_t[i] = t_tok
+                self.tracer.event("token", rid=req.rid, slot=int(i),
+                                  pos=int(self.pos[i]))
             self.pos[i] += 1
             self.last_token[i, 0] = tok
             # pos is the *next* write index; retire once it passes the last
@@ -364,10 +507,17 @@ class ServeEngine:
                     len(req.out_tokens) >= req.max_new_tokens or \
                     self.pos[i] >= self.s_max:
                 req.done = True
+                self._outcome("completed")
+                self.tracer.event("finish", rid=req.rid,
+                                  n_tokens=len(req.out_tokens))
+                self._t_enq.pop(id(req), None)
                 self.active[i] = None
                 # park the freed row at 0 so inactive rows are in-bounds by
                 # construction, not by JAX's OOB scatter-drop semantics
                 self.pos[i] = 0
+        if tr:
+            self.tracer.span("decode_step", t_step,
+                             active=int(act.sum()), slots=self.slots)
 
     def _sample(self, logits, temperatures) -> np.ndarray:
         """Host-side batched sampling: greedy where ``temperatures[i] ==
@@ -395,10 +545,20 @@ class ServeEngine:
         end), ``evicted`` (cut off at ``max_steps`` with partial output),
         ``rejected`` (prompt cannot fit the cache — skipped, the rest of
         the batch keeps running) and ``unserved`` (never admitted); the
-        four always sum to ``len(requests)``."""
+        four always sum to ``len(requests)``.
+
+        The returned counts are **derived from the metrics registry**
+        (DESIGN.md §9): every outcome increments this engine's
+        ``serve_requests_total{outcome=...}`` child as it happens, and
+        the dict reports the deltas over this call — one source of
+        truth, same shape as before."""
         t0 = time.time()
+        base = {o: self._outcome_count(o)
+                for o in ("completed", "evicted", "rejected", "unserved")}
+        for r in requests:
+            self._mark_enqueue(r)
         pending = list(requests)
-        n_rejected = 0
+        rejected_ids = set()
         steps = 0
         while (pending or any(self.active)) and steps < max_steps:
             # drain: fill every free slot, one padded prefill per window
@@ -412,8 +572,9 @@ class ServeEngine:
                     try:
                         self._prefill_len(pending[0])
                     except PromptTooLong:
-                        pending.pop(0)
-                        n_rejected += 1
+                        req = pending.pop(0)
+                        rejected_ids.add(id(req))
+                        self._reject(req)
                         continue
                     window.append(pending.pop(0))
                 if not window:
@@ -421,14 +582,21 @@ class ServeEngine:
                 self._admit(window)
             self.step()
             steps += 1
-        never_ran = len([r for r in requests
-                         if not r.done and not r.out_tokens])
+        # cutoff classification: anything not completed/rejected by now is
+        # evicted (partial output) or unserved (never admitted)
+        for r in requests:
+            if r.done or id(r) in rejected_ids:
+                continue
+            if r.out_tokens:
+                self._outcome("evicted")
+                self.tracer.event("evict", rid=r.rid,
+                                  n_tokens=len(r.out_tokens))
+            else:
+                self._outcome("unserved")
+            self._t_enq.pop(id(r), None)
         return {
-            "completed": len([r for r in requests if r.done]),
-            "evicted": len([r for r in requests
-                            if not r.done and r.out_tokens]),
-            "rejected": n_rejected,
-            "unserved": never_ran - n_rejected,
+            **{o: self._outcome_count(o) - base[o]
+               for o in ("completed", "evicted", "rejected", "unserved")},
             "wall_s": time.time() - t0,
             **self._stats,
         }
