@@ -59,7 +59,7 @@ def main() -> None:
         t0 = time.time()
         try:
             rows = fn()
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # smelint: disable=EXC001 — suite driver: failure is recorded, remaining suites still run
             failures += 1
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
             doc["errors"][fn.__name__] = f"{type(e).__name__}: {e}"

@@ -1,0 +1,38 @@
+"""smelint: exactness & kernel-invariant static analysis (DESIGN.md §10).
+
+Every guarantee the repo ships — v1/v2/v3 token bit-identity, mesh-vs-1x1
+exactness, HLO invariance under telemetry — is enforced after the fact by
+runtime tests; the *invariants* live in DESIGN.md prose.  This package
+checks them mechanically at lint time: an AST-walking framework (two-phase
+per-file collect -> cross-file finalize, per-file diagnostics with stable
+rule IDs, ``# smelint: disable=RULE`` suppressions, a committed baseline
+so pre-existing findings never block) plus a checker suite encoding the
+repo's real rules:
+
+  * **jit-hygiene** (JIT0xx) — no env/clock reads or host materialization
+    in code reachable from ``jax.jit`` / ``pl.pallas_call`` roots;
+  * **exactness** (EXA0xx) — pow2-exact arithmetic in modules marked
+    ``# smelint: exact-module``; sharding constraints only through
+    ``parallel/policy.py``; exact modules never import non-exact ones;
+  * **pallas-kernel** (PLK0xx) — paired ``make_async_copy`` start/wait,
+    grid/BlockSpec/scratch arity consistency, ``interpret=`` plumbed;
+  * **backend-contract** (BCK0xx) — every ``@register_backend`` entry
+    implements the full surface;
+  * **obs-isolation** (OBS0xx) — ``repro.obs`` stays out of kernel/model
+    modules;
+  * **env-registry** (ENV0xx) — every ``SME_*`` env read is declared in
+    :mod:`repro.analysis.envcat`;
+  * **exceptions** (EXC0xx) / **repo-hygiene** (HYG0xx).
+
+CLI: ``python -m repro.analysis [paths...] [--format=json|text]
+[--baseline PATH] [--write-baseline]`` — exits 1 on any non-baselined,
+non-suppressed finding (the CI gate).
+"""
+from .core import (AnalysisRun, Checker, FileContext, Finding,
+                   all_rules, load_baseline, register_checker, run_analysis,
+                   write_baseline)
+
+__all__ = [
+    "AnalysisRun", "Checker", "FileContext", "Finding", "all_rules",
+    "load_baseline", "register_checker", "run_analysis", "write_baseline",
+]

@@ -1,0 +1,112 @@
+"""smelint CLI (DESIGN.md §10).
+
+    PYTHONPATH=src python -m repro.analysis [paths...]
+        [--format=text|json] [--out report.json]
+        [--baseline PATH | --no-baseline] [--write-baseline]
+        [--list-rules] [--no-repo-checks]
+
+Exit codes: 0 clean, 1 active findings (the CI gate), 2 usage/parse
+errors.  Default scan roots are ``src``, ``benchmarks`` and ``examples``
+under ``--root`` (tests and fixtures are excluded — fixture files *are*
+rule violations).  The default baseline is the committed
+``src/repro/analysis/baseline.json``; ``--write-baseline`` rewrites it
+from the current findings (for adopting a new rule with historical debt —
+this repo's is empty because the initial sweep fixed everything).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from .core import (DEFAULT_PATHS, all_rules, load_baseline, run_analysis,
+                   write_baseline)
+
+DEFAULT_BASELINE = "src/repro/analysis/baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="smelint: exactness & kernel-invariant static "
+                    "analyzer (DESIGN.md §10)")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to scan (default: {DEFAULT_PATHS})")
+    ap.add_argument("--root", default=".",
+                    help="repo root the default paths/baseline resolve "
+                         "against (default: cwd)")
+    ap.add_argument("--format", choices=["text", "json"], default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path "
+                         "(CI artifact)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         f"under --root when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings and "
+                         "exit 0")
+    ap.add_argument("--no-repo-checks", action="store_true",
+                    help="skip git/.gitignore repo-hygiene rules (HYG0xx)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, (cat, desc) in all_rules().items():
+            print(f"{rid}  [{cat}] {desc}")
+        return 0
+
+    root = pathlib.Path(args.root).resolve()
+    baseline = None
+    baseline_path = pathlib.Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+    if not args.no_baseline and not args.write_baseline \
+            and baseline_path.is_file():
+        try:
+            baseline = load_baseline(baseline_path)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"error: bad baseline {baseline_path}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    run = run_analysis(root, paths=args.paths or None, baseline=baseline,
+                       repo_checks=not args.no_repo_checks)
+    for err in run.errors:
+        print(f"error: {err}", file=sys.stderr)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, run.findings)
+        print(f"wrote baseline with {len(run.findings)} entries to "
+              f"{baseline_path}")
+        return 0
+
+    report = {
+        "version": 1,
+        "root": str(root),
+        "files_scanned": len(run.files),
+        "rules": {rid: {"category": cat, "description": desc}
+                  for rid, (cat, desc) in all_rules().items()},
+        "findings": [f.to_dict() for f in run.findings],
+        "suppressed": run.suppressed,
+        "baselined": run.baselined,
+        "errors": run.errors,
+    }
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(report, indent=1))
+    if args.format == "json":
+        print(json.dumps(report, indent=1))
+    else:
+        for f in run.findings:
+            print(f.render())
+        print(f"smelint: {len(run.findings)} finding(s) in "
+              f"{len(run.files)} files ({run.suppressed} suppressed, "
+              f"{run.baselined} baselined)")
+    if run.errors:
+        return 2
+    return 1 if run.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Small AST helpers shared by the smelint checkers."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+__all__ = ["dotted", "call_target", "iter_functions", "FunctionNode",
+           "collect_aliases", "const_str_tuple", "body_without_nested"]
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain (``a.b.c``), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_target(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+class FunctionNode:
+    """A function def (or jitted lambda) with its enclosing qualname."""
+
+    def __init__(self, node, qualname: str, cls: Optional[str]):
+        self.node = node
+        self.qualname = qualname
+        self.cls = cls          # enclosing class name, if a method
+        self.name = qualname.rsplit(".", 1)[-1]
+        self.lineno = getattr(node, "lineno", 0)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in
+                 getattr(a, "posonlyargs", []) + a.args + a.kwonlyargs]
+        return names
+
+
+def iter_functions(tree: ast.Module) -> Iterator[FunctionNode]:
+    """Every function/method def in the module, with dotted qualnames
+    (``Class.method``, ``outer.inner``)."""
+
+    def walk(body, prefix: str, cls: Optional[str]):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{node.name}"
+                yield FunctionNode(node, q, cls)
+                yield from walk(node.body, q + ".", cls)
+            elif isinstance(node, ast.ClassDef):
+                yield from walk(node.body, f"{prefix}{node.name}.",
+                                node.name)
+            elif isinstance(node, (ast.If, ast.Try, ast.With, ast.For,
+                                   ast.While)):
+                for sub in ast.iter_child_nodes(node):
+                    if isinstance(sub, ast.stmt):
+                        yield from walk([sub], prefix, cls)
+
+    yield from walk(tree.body, "", None)
+
+
+def collect_aliases(tree: ast.AST, module: str) -> Dict[str, str]:
+    """File-wide import alias map: local name -> dotted target.
+
+    Handles ``import a.b as x``, ``from m import f as g`` and relative
+    imports (resolved against ``module``, the importer's dotted name).
+    """
+    pkg_parts = module.split(".")[:-1] if module else []
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = (
+                    f"{mod}.{a.name}" if mod else a.name)
+    return aliases
+
+
+def const_str_tuple(node) -> Tuple[str, ...]:
+    """Constant str / tuple-or-list-of-str value of a node, else ()."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def body_without_nested(fn_node) -> Iterator[ast.AST]:
+    """Walk a function body, *excluding* nested function/class subtrees
+    (those are separate call-graph nodes) and the def's own decorators."""
+    if isinstance(fn_node, ast.Lambda):
+        stack: List[ast.AST] = [fn_node.body]
+    else:
+        stack = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))

@@ -1,0 +1,13 @@
+"""smelint checker suite — importing this package registers every
+checker with :mod:`repro.analysis.core` (DESIGN.md §10 catalogs the
+rules).  A new checker is one module here: subclass ``Checker``, declare
+``category`` + ``rules``, decorate with ``@register_checker``, import it
+below, and add a fixture under ``tests/fixtures/smelint/`` proving the
+rule fires."""
+from . import (backend_contract, env_registry, exactness, exceptions,
+               jit_hygiene, obs_isolation, pallas_kernel, repo_hygiene)
+
+__all__ = [
+    "backend_contract", "env_registry", "exactness", "exceptions",
+    "jit_hygiene", "obs_isolation", "pallas_kernel", "repo_hygiene",
+]

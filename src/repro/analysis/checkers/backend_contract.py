@@ -1,0 +1,133 @@
+"""backend-contract (BCK0xx): every ``@register_backend`` entry implements
+the full surface ``sme_apply`` dispatches against (DESIGN.md §3).
+
+A backend that forgets ``matmul2d`` fails at serve time, deep inside a
+jitted program; one that forgets ``pack_block_key`` silently *aliases*
+stale operands across block sizes (the bug class PR 6's operand-cache
+keying exists to prevent).  The checker resolves each registered class's
+method surface through its in-file base chain (``SMEBackend`` provides
+concrete ``pad_hint``/``pack_block_key``/``supports`` defaults; a body
+that just raises ``NotImplementedError`` does not count as concrete).
+Operand-free backends (``OPERANDS = ()``, the xla dequant path) are
+exempt from ``pack_weight``/``matmul2d``: ``sme_apply`` short-circuits
+them before either is consulted.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..astutil import dotted
+from ..core import Checker, FileContext, Finding, register_checker
+
+#: method -> required only when the backend has operands
+_SURFACE = {"pack_weight": True, "matmul2d": True,
+            "pad_hint": False, "pack_block_key": False}
+
+
+def _is_abstract(fn: ast.FunctionDef) -> bool:
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr) and
+                    isinstance(s.value, ast.Constant))]   # drop docstring
+    return len(body) == 1 and isinstance(body[0], ast.Raise) and \
+        isinstance(body[0].exc, (ast.Call, ast.Name)) and \
+        "NotImplementedError" in ast.dump(body[0].exc)
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef):
+        self.node = node
+        self.bases = [dotted(b) for b in node.bases]
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        self.operands: Optional[Tuple] = None     # () vs non-empty vs None
+        self.has_name = False
+        self.registered = any(
+            (dotted(d) or "").endswith("register_backend")
+            for d in node.decorator_list)
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "OPERANDS" and \
+                            isinstance(stmt.value, ast.Tuple):
+                        self.operands = tuple(stmt.value.elts)
+                    elif isinstance(t, ast.Name) and t.id == "name" and \
+                            isinstance(stmt.value, ast.Constant) and \
+                            stmt.value.value:
+                        self.has_name = True
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                if stmt.target.id == "OPERANDS" and \
+                        isinstance(stmt.value, ast.Tuple):
+                    self.operands = tuple(stmt.value.elts)
+                elif stmt.target.id == "name" and \
+                        isinstance(stmt.value, ast.Constant) and \
+                        stmt.value.value:
+                    self.has_name = True
+
+
+@register_checker
+class BackendContractChecker(Checker):
+    category = "backend-contract"
+    rules = {
+        "BCK001": "registered SME backend missing part of the dispatch "
+                  "surface (pack_weight/matmul2d/pad_hint/pack_block_key "
+                  "or name/OPERANDS)",
+    }
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        classes: Dict[str, _ClassInfo] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _ClassInfo(node)
+        findings: List[Finding] = []
+        for name, info in classes.items():
+            if not info.registered:
+                continue
+            chain = self._mro(info, classes)
+            findings += self._check_surface(ctx, name, info, chain)
+        return findings
+
+    @staticmethod
+    def _mro(info: _ClassInfo, classes) -> List[_ClassInfo]:
+        chain, cur, seen = [info], info, set()
+        while cur.bases:
+            base = next((classes[b.rsplit(".", 1)[-1]] for b in cur.bases
+                         if b and b.rsplit(".", 1)[-1] in classes), None)
+            if base is None or id(base) in seen:
+                break
+            seen.add(id(base))
+            chain.append(base)
+            cur = base
+        return chain
+
+    def _check_surface(self, ctx, name, info, chain) -> List[Finding]:
+        findings: List[Finding] = []
+        operands = next((c.operands for c in chain
+                         if c.operands is not None), None)
+        has_name = any(c.has_name for c in chain)
+        if not has_name:
+            findings.append(ctx.finding(
+                info.node, "BCK001",
+                f"backend `{name}` has no non-empty `name` — the registry "
+                f"keys on it"))
+        if operands is None:
+            findings.append(ctx.finding(
+                info.node, "BCK001",
+                f"backend `{name}` declares no OPERANDS tuple — sme_apply "
+                f"cannot tell packed from operand-free dispatch"))
+        for method, needs_operands in _SURFACE.items():
+            if needs_operands and not operands:
+                continue          # operand-free: sme_apply short-circuits
+            impl = next((c.methods[method] for c in chain
+                         if method in c.methods), None)
+            if impl is None or _is_abstract(impl):
+                where = ("missing" if impl is None
+                         else "only abstract (raises NotImplementedError)")
+                findings.append(ctx.finding(
+                    info.node, "BCK001",
+                    f"backend `{name}`: `{method}` is {where} — every "
+                    f"registry entry must implement the full dispatch "
+                    f"surface"))
+        return findings

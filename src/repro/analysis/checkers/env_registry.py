@@ -1,0 +1,69 @@
+"""env-registry (ENV0xx): every ``SME_*`` env read is declared once.
+
+The repo's env knobs accreted one file at a time (backend resolution,
+decode-kernel dispatch, telemetry gate, autotune cache, bench output) —
+seven reads across six files before :mod:`repro.analysis.envcat` existed.
+ENV001 pins the set closed: any ``os.environ.get`` / ``os.getenv`` /
+``os.environ[...]`` read of a name starting with ``SME_`` must have a
+catalog entry (with default, accepted values, consumers, and a docstring
+that generates the DESIGN.md table).  Writes are not flagged — benchmarks
+legitimately save/restore ``SME_DECODE_KERNEL`` around forced-path
+sweeps.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from ..astutil import call_target, dotted
+from ..core import Checker, FileContext, Finding, register_checker
+
+
+def _declared_names() -> Set[str]:
+    from ..envcat import CATALOG
+    return set(CATALOG)
+
+
+def env_reads(tree: ast.AST) -> List[Tuple[str, int]]:
+    """All (name, line) string-literal env reads in a parsed module."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(tree):
+        name: Optional[str] = None
+        if isinstance(node, ast.Call):
+            tgt = call_target(node)
+            if tgt in ("os.environ.get", "os.getenv", "environ.get",
+                       "getenv") and node.args:
+                a = node.args[0]
+                if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                    name = a.value
+        elif isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Load) and \
+                dotted(node.value) in ("os.environ", "environ"):
+            s = node.slice
+            if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                name = s.value
+        if name is not None:
+            out.append((name, node.lineno))
+    return out
+
+
+@register_checker
+class EnvRegistryChecker(Checker):
+    category = "env-registry"
+    rules = {
+        "ENV001": "SME_* environment variable read without a "
+                  "repro.analysis.envcat catalog entry",
+    }
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        declared = _declared_names()
+        findings: List[Finding] = []
+        for name, line in env_reads(ctx.tree):
+            if name.startswith("SME_") and name not in declared:
+                findings.append(ctx.finding(
+                    line, "ENV001",
+                    f"env var {name!r} is read here but not declared in "
+                    f"repro.analysis.envcat.CATALOG — add an entry "
+                    f"(default, values, consumers, doc) and regenerate "
+                    f"the DESIGN.md table"))
+        return findings

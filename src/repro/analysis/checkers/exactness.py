@@ -1,0 +1,134 @@
+"""exactness (EXA0xx): the pow2-exact numerics contract (DESIGN.md §5/§10).
+
+The SME splice-and-splice scheme is exact because every rescale it applies
+(``2^row_exp`` squeeze compensation, ``2^-n_bits`` dequant, per-tile
+squeeze depth) is an exact power of two — scaling by pow2 commutes with
+f32 rounding, so accumulation order is the only thing that matters and
+the kernels pin it.  Modules carrying ``# smelint: exact-module`` opt in
+to mechanical enforcement of that posture:
+
+  * EXA001 — ``jnp.sum``/``jnp.mean`` without an explicit ``dtype=`` in an
+    exact module: the accumulation dtype (and hence rounding) is then
+    backend-dependent, which is exactly the wiggle room the bit-identity
+    guarantees exclude.
+  * EXA002 — division by a non-power-of-two float literal in an exact
+    module: a non-pow2 rescale does not commute with rounding, so it
+    cannot ride inside a splice/accumulate path (fold it into the offline
+    ``scale`` instead, or suppress with justification).
+  * EXA003 — ``with_sharding_constraint`` outside ``parallel/policy.py``:
+    the mesh-exactness workarounds (all-None hint skipping, the lhs
+    replication pin) live in ``constrain``/``_wsc_hint``; a raw constraint
+    anywhere else silently bypasses them (DESIGN.md §7).
+  * EXA004 — a module marked exact imports a module marked
+    ``# smelint: non-exact-module`` (the marking the noisy crossbar-sim
+    backend will carry): non-exact code must stay behind the backend
+    registry, never inside the exact core.
+"""
+from __future__ import annotations
+
+import ast
+import math
+from typing import List
+
+from ..astutil import collect_aliases, call_target, dotted
+from ..core import Checker, FileContext, Finding, register_checker
+
+_POLICY_FILES = ("src/repro/parallel/policy.py",)
+
+
+def _is_pow2(v: float) -> bool:
+    if v <= 0 or math.isinf(v) or math.isnan(v):
+        return False
+    m, _ = math.frexp(v)
+    return m == 0.5
+
+
+@register_checker
+class ExactnessChecker(Checker):
+    category = "exactness"
+    rules = {
+        "EXA001": "dtype-unspecified jnp.sum/jnp.mean in an exact module",
+        "EXA002": "non-pow2 float-literal division in an exact module",
+        "EXA003": "with_sharding_constraint outside parallel/policy.py",
+        "EXA004": "exact module imports a non-exact module",
+    }
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        aliases = collect_aliases(ctx.tree, ctx.module)
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                tgt = call_target(node)
+                full = self._expand(aliases, tgt)
+                if full in ("jax.lax.with_sharding_constraint",
+                            "jax.sharding.with_sharding_constraint",
+                            "with_sharding_constraint") and \
+                        ctx.rel not in _POLICY_FILES:
+                    findings.append(ctx.finding(
+                        node, "EXA003",
+                        "raw with_sharding_constraint — model/serve code "
+                        "must go through parallel.policy.constrain so the "
+                        "exact-serving workarounds apply"))
+                elif ctx.is_exact_module and \
+                        full in ("jax.numpy.sum", "jax.numpy.mean") and \
+                        not any(kw.arg == "dtype" for kw in node.keywords):
+                    findings.append(ctx.finding(
+                        node, "EXA001",
+                        f"{tgt}() without dtype= in an exact module: the "
+                        f"accumulation dtype is backend-dependent"))
+            elif ctx.is_exact_module and isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, ast.Div):
+                lit = node.right
+                if isinstance(lit, ast.Constant) and \
+                        isinstance(lit.value, float) and \
+                        not _is_pow2(lit.value):
+                    findings.append(ctx.finding(
+                        node, "EXA002",
+                        f"division by non-pow2 literal {lit.value!r} in an "
+                        f"exact module does not commute with f32 rounding"))
+        return findings
+
+    @staticmethod
+    def _expand(aliases, name):
+        if not name:
+            return None
+        head, _, rest = name.partition(".")
+        if head in aliases:
+            return aliases[head] + ("." + rest if rest else "")
+        return name
+
+    def finalize(self, run) -> List[Finding]:
+        findings: List[Finding] = []
+        non_exact = {m for m, c in run.modules.items()
+                     if c.is_non_exact_module}
+        if not non_exact:
+            return findings
+        for ctx in run.files:
+            if not ctx.is_exact_module:
+                continue
+            for node in ast.walk(ctx.tree):
+                targets: List[str] = []
+                if isinstance(node, ast.Import):
+                    targets = [a.name for a in node.names]
+                elif isinstance(node, ast.ImportFrom):
+                    mod = self._abs_from(ctx.module, node)
+                    targets = [mod] + [f"{mod}.{a.name}"
+                                       for a in node.names if mod]
+                for t in targets:
+                    if t in non_exact:
+                        findings.append(ctx.finding(
+                            node, "EXA004",
+                            f"exact module `{ctx.module}` imports "
+                            f"non-exact module `{t}` — non-exact paths "
+                            f"stay behind the backend registry"))
+                        break
+        return findings
+
+    @staticmethod
+    def _abs_from(module: str, node: ast.ImportFrom) -> str:
+        if not node.level:
+            return node.module or ""
+        pkg = module.split(".")[:-1]
+        base = pkg[:len(pkg) - (node.level - 1)]
+        return ".".join(base + ([node.module] if node.module else []))

@@ -1,0 +1,55 @@
+"""exceptions (EXC0xx): no silent blanket handlers.
+
+EXC001 flags ``except Exception`` / ``except BaseException`` / bare
+``except:`` unless the handler re-raises.  Broad catches hide the
+failures every other invariant here exists to surface (a kernel shape
+error swallowed into a fallback path serves wrong tokens *quietly*).
+The repo's two legitimate broad catches — a record-and-continue driver
+loop — carry ``# smelint: disable=EXC001`` with a justification, which is
+the intended escape hatch; everything else names the exceptions it means.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..astutil import dotted
+from ..core import Checker, FileContext, Finding, register_checker
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(node) -> bool:
+    if node is None:
+        return True                     # bare except:
+    if isinstance(node, ast.Tuple):
+        return any(_is_broad(e) for e in node.elts)
+    return (dotted(node) or "") in _BROAD
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise) and node.exc is None:
+            return True
+    return False
+
+
+@register_checker
+class ExceptionsChecker(Checker):
+    category = "exceptions"
+    rules = {
+        "EXC001": "broad `except Exception`/bare `except:` that does not "
+                  "re-raise",
+    }
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) and \
+                    _is_broad(node.type) and not _reraises(node):
+                findings.append(ctx.finding(
+                    node, "EXC001",
+                    "catch the specific exceptions this handler means "
+                    "(or re-raise; a deliberate record-and-continue "
+                    "driver loop may suppress with justification)"))
+        return findings

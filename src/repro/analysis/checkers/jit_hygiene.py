@@ -1,0 +1,366 @@
+"""jit-hygiene (JIT0xx): nothing host-side inside traced code.
+
+Roots are functions *syntactically* handed to the tracer: ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` decorations, ``jax.jit(fn, ...)``
+call sites (plain name, ``functools.partial(name, ...)`` or an inline
+lambda), and kernels passed to ``pl.pallas_call``.  Reachability then
+follows the static call graph: bare-name calls resolve within the file,
+``mod.func`` / ``from mod import func`` calls resolve into other scanned
+modules, ``self.method`` within the class, nested defs are always
+reachable from their parent (``pl.when`` closures), and *passing a local
+function as an argument* adds an edge (``fori_loop`` bodies, kernel
+callbacks through ``csc_pallas_call``).
+
+The walk stops at functions marked ``# smelint: trace-time`` (on or
+directly above the ``def``): those are *host-side dispatch boundaries* —
+``sme_apply`` resolving the backend stack, block sizes and the autotune
+cache before staging a ``_v*_call`` jit root is the canonical case.
+Everything below such a boundary runs in ordinary Python at trace time by
+design, and the real jit roots it stages are still discovered
+syntactically.
+
+Inside reachable code:
+
+  * JIT001 — ``os.environ`` / ``os.getenv`` reads.  Env decisions must be
+    made at dispatch time (``resolve_backend`` / ``resolve_block_m``
+    style), never inside a traced body where they silently freeze into
+    whichever compilation ran first.
+  * JIT002 — ``time.*`` clock reads (trace-time constants masquerading as
+    measurements; timing belongs host-side in ``repro.obs``).
+  * JIT003 — host materialization: ``np.asarray`` / ``np.array`` /
+    ``.item()`` anywhere reachable, and ``float()`` / ``int()`` on a
+    non-static parameter of a jit root (a concretization error on traced
+    values; shapes and ``static_argnames`` are exempt).
+  * JIT004 — data-dependent Python branch: an ``if``/``while`` in a jit
+    root whose test reads a non-static parameter (``x is None`` checks
+    exempt — those test the *python* structure, not the traced value).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..astutil import (body_without_nested, call_target, collect_aliases,
+                       const_str_tuple, dotted, iter_functions)
+from ..core import Checker, FileContext, Finding, register_checker
+
+_TIME_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+               "time.process_time", "time.sleep", "time.time_ns",
+               "time.perf_counter_ns", "time.monotonic_ns"}
+_NUMPY_HOST = {"numpy.asarray", "numpy.array", "np.asarray", "np.array"}
+
+
+class _FuncInfo:
+    def __init__(self, module: str, qualname: str, node, cls: Optional[str]):
+        self.module = module
+        self.qualname = qualname
+        self.node = node
+        self.cls = cls
+        self.params: List[str] = []
+        self.static: Optional[Tuple[str, ...]] = None  # set when a root
+        self.is_root = False
+        self.barrier = False              # `# smelint: trace-time` marked
+        self.calls: List[str] = []        # dotted callee names (raw)
+        self.callbacks: List[str] = []    # local functions passed as args
+        self.children: List[str] = []     # nested def qualnames
+        #: (rule, line, message) violations valid whenever reachable
+        self.violations: List[Tuple[str, int, str]] = []
+        #: (line, param, kind) — root-only checks (need static info)
+        self.param_casts: List[Tuple[int, str, str]] = []
+        self.branches: List[Tuple[int, str]] = []
+
+
+@register_checker
+class JitHygieneChecker(Checker):
+    category = "jit-hygiene"
+    rules = {
+        "JIT001": "os.environ/os.getenv read inside jit-traced code",
+        "JIT002": "time.* clock read inside jit-traced code",
+        "JIT003": "host materialization (np.asarray/.item()/float() on a "
+                  "traced value) inside jit-traced code",
+        "JIT004": "data-dependent Python branch on a traced parameter "
+                  "inside a jit root",
+    }
+
+    def __init__(self):
+        self.functions: Dict[Tuple[str, str], _FuncInfo] = {}
+        #: module -> bare name -> qualnames defined in that module
+        self.name_index: Dict[str, Dict[str, List[str]]] = {}
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        #: (module, bare-name-or-qualname, static_argnames, via) to resolve
+        self.root_refs: List[Tuple[str, str, Tuple[str, ...], str]] = []
+
+    # ------------------------------------------------------------- collect
+    def collect(self, ctx: FileContext) -> None:
+        mod = ctx.module
+        aliases = collect_aliases(ctx.tree, mod)
+        self.aliases[mod] = aliases
+        index = self.name_index.setdefault(mod, {})
+
+        funcs = list(iter_functions(ctx.tree))
+        for fn in funcs:
+            info = _FuncInfo(mod, fn.qualname, fn.node, fn.cls)
+            info.params = fn.params
+            first = min([fn.node.lineno] +
+                        [d.lineno for d in
+                         getattr(fn.node, "decorator_list", [])])
+            info.barrier = bool(ctx.trace_time_lines &
+                                {fn.node.lineno, first, first - 1})
+            self.functions[(mod, fn.qualname)] = info
+            index.setdefault(fn.name, []).append(fn.qualname)
+
+        for fn in funcs:
+            info = self.functions[(mod, fn.qualname)]
+            if "." in fn.qualname:
+                parent_q = fn.qualname.rsplit(".", 1)[0]
+                parent = self.functions.get((mod, parent_q))
+                if parent is not None:
+                    parent.children.append(fn.qualname)
+            static = self._decorated_static(fn.node)
+            if static is not None:
+                info.is_root = True
+                info.static = static
+            self._scan_body(ctx, info)
+
+        # jax.jit(...) / pallas_call(...) call sites anywhere in the file
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                self._scan_root_call(ctx, node, aliases)
+
+    def _expand(self, aliases: Dict[str, str], name: Optional[str]):
+        if not name:
+            return None
+        head, _, rest = name.partition(".")
+        if head in aliases:
+            return aliases[head] + ("." + rest if rest else "")
+        return name
+
+    def _is_jax_jit(self, aliases, node) -> bool:
+        return self._expand(aliases, dotted(node)) in ("jax.jit", "jit")
+
+    def _decorated_static(self, fn_node) -> Optional[Tuple[str, ...]]:
+        """static_argnames when the def is jit-decorated, else None."""
+        for dec in getattr(fn_node, "decorator_list", []):
+            if isinstance(dec, (ast.Name, ast.Attribute)):
+                if dotted(dec) in ("jax.jit", "jit"):
+                    return ()
+            elif isinstance(dec, ast.Call):
+                tgt = call_target(dec)
+                if tgt in ("jax.jit", "jit"):
+                    return self._static_kwargs(dec)
+                if tgt in ("functools.partial", "partial") and dec.args:
+                    if dotted(dec.args[0]) in ("jax.jit", "jit"):
+                        return self._static_kwargs(dec)
+        return None
+
+    @staticmethod
+    def _static_kwargs(call: ast.Call) -> Tuple[str, ...]:
+        out: Tuple[str, ...] = ()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                out += const_str_tuple(kw.value)
+            elif kw.arg == "static_argnums":
+                # positional statics: "#<i>" markers, mapped to param
+                # names once the function is known (finalize)
+                elts = (kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value])
+                out += tuple(
+                    f"#{e.value}" for e in elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int))
+        return out
+
+    def _scan_root_call(self, ctx: FileContext, node: ast.Call,
+                        aliases) -> None:
+        tgt = self._expand(aliases, call_target(node))
+        is_jit = tgt in ("jax.jit", "jit")
+        is_pallas = tgt is not None and tgt.endswith("pallas_call")
+        if not (is_jit or is_pallas) or not node.args:
+            return
+        static = self._static_kwargs(node) if is_jit else ()
+        arg0 = node.args[0]
+        if isinstance(arg0, ast.Call) and \
+                call_target(arg0) in ("functools.partial", "partial") \
+                and arg0.args:
+            arg0 = arg0.args[0]
+        if isinstance(arg0, ast.Name):
+            self.root_refs.append((ctx.module, arg0.id, static,
+                                   "jax.jit" if is_jit else "pallas_call"))
+        elif isinstance(arg0, ast.Lambda) and is_jit:
+            q = f"<lambda:{arg0.lineno}>"
+            info = _FuncInfo(ctx.module, q, arg0, None)
+            info.params = [a.arg for a in arg0.args.args]
+            info.is_root = True
+            info.static = static
+            self.functions[(ctx.module, q)] = info
+            self._scan_body(ctx, info)
+
+    # -- violation + call scanning inside one function --------------------
+    def _scan_body(self, ctx: FileContext, info: _FuncInfo) -> None:
+        aliases = self.aliases[info.module]
+        for node in body_without_nested(info.node):
+            if isinstance(node, ast.Subscript) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    self._expand(aliases, dotted(node.value)) == "os.environ":
+                info.violations.append(
+                    ("JIT001", node.lineno, "os.environ[...] read"))
+            elif isinstance(node, (ast.If, ast.While)):
+                name = self._traced_test_param(node.test, info)
+                if name:
+                    info.branches.append((node.lineno, name))
+            elif isinstance(node, ast.Call):
+                self._scan_call(ctx, info, node, aliases)
+
+    def _scan_call(self, ctx, info: _FuncInfo, node: ast.Call,
+                   aliases) -> None:
+        raw = call_target(node)
+        tgt = self._expand(aliases, raw)
+        if tgt in ("os.environ.get", "os.getenv"):
+            info.violations.append(("JIT001", node.lineno, f"{tgt}() read"))
+        elif tgt in _TIME_CALLS:
+            info.violations.append(("JIT002", node.lineno, f"{tgt}() call"))
+        elif tgt in _NUMPY_HOST or (tgt or "").startswith("numpy.as"):
+            info.violations.append(
+                ("JIT003", node.lineno,
+                 f"{raw}() materializes on host"))
+        elif raw is not None and raw.endswith(".item") and not node.args:
+            info.violations.append(
+                ("JIT003", node.lineno, ".item() forces a host transfer"))
+        elif tgt in ("float", "int") and len(node.args) == 1 and \
+                isinstance(node.args[0], ast.Name) and \
+                node.args[0].id in info.params:
+            info.param_casts.append(
+                (node.lineno, node.args[0].id, tgt))
+        if raw is not None:
+            info.calls.append(raw)
+        # a local function passed as an argument is an edge (fori_loop
+        # bodies, kernel callbacks, tree.map visitors)
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            cb = arg
+            if isinstance(cb, ast.Call) and \
+                    call_target(cb) in ("functools.partial", "partial") \
+                    and cb.args:
+                cb = cb.args[0]
+            if isinstance(cb, ast.Name):
+                info.callbacks.append(cb.id)
+
+    @staticmethod
+    def _traced_test_param(test: ast.AST, info: _FuncInfo) -> Optional[str]:
+        """Param name a branch test reads, unless it is an ``is None``
+        structure check."""
+        if isinstance(test, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in test.ops):
+            return None
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Call):
+                return None      # delegate: isinstance()/callable() checks
+            if isinstance(sub, ast.Name) and \
+                    isinstance(sub.ctx, ast.Load) and sub.id in info.params:
+                return sub.id
+        return None
+
+    # ------------------------------------------------------------ finalize
+    def finalize(self, run) -> List[Finding]:
+        # resolve jax.jit(fn)/pallas_call(fn) refs onto the function table
+        for mod, name, static, _via in self.root_refs:
+            for q in self.name_index.get(mod, {}).get(name, []):
+                info = self.functions[(mod, q)]
+                info.is_root = True
+                if info.static is None:
+                    info.static = static
+
+        reachable: Dict[Tuple[str, str], str] = {}   # node -> root qualname
+        stack = [(key, key[1]) for key, f in self.functions.items()
+                 if f.is_root]
+        while stack:
+            key, root = stack.pop()
+            if key in reachable:
+                continue
+            reachable[key] = root
+            info = self.functions.get(key)
+            if info is None:
+                continue
+            for edge in self._edges(info):
+                if edge in reachable:
+                    continue
+                tgt = self.functions.get(edge)
+                if tgt is not None and tgt.barrier:
+                    continue      # trace-time dispatch boundary
+                stack.append((edge, root))
+
+        findings: List[Finding] = []
+        for key, root in sorted(reachable.items()):
+            info = self.functions.get(key)
+            if info is None:
+                continue
+            ctx = run.modules.get(info.module)
+            if ctx is None:
+                continue
+            via = ("" if info.qualname == root
+                   else f", reachable from jit root `{root}`")
+            for rule, line, msg in info.violations:
+                findings.append(ctx.finding(
+                    line, rule,
+                    f"{msg} inside `{info.qualname}`{via} — jitted code "
+                    f"must not touch host state"))
+            if info.is_root:
+                static = set()
+                for s in info.static or ():
+                    if s.startswith("#") and s[1:].isdigit():
+                        i = int(s[1:])
+                        if i < len(info.params):
+                            static.add(info.params[i])
+                    else:
+                        static.add(s)
+                for line, param, kind in info.param_casts:
+                    if param in static:
+                        continue
+                    findings.append(ctx.finding(
+                        line, "JIT003",
+                        f"{kind}({param}) concretizes a traced parameter "
+                        f"of jit root `{info.qualname}` (declare it in "
+                        f"static_argnames if it is static)"))
+                for line, param in info.branches:
+                    if param in static:
+                        continue
+                    findings.append(ctx.finding(
+                        line, "JIT004",
+                        f"python branch on traced parameter `{param}` of "
+                        f"jit root `{info.qualname}` (use lax.cond/select, "
+                        f"or declare it static)"))
+        return findings
+
+    def _edges(self, info: _FuncInfo) -> List[Tuple[str, str]]:
+        out: List[Tuple[str, str]] = []
+        mod = info.module
+        aliases = self.aliases.get(mod, {})
+        index = self.name_index.get(mod, {})
+        for q in info.children:
+            out.append((mod, q))
+        for name in info.callbacks:
+            for q in index.get(name, []):
+                out.append((mod, q))
+        for raw in info.calls:
+            head, _, rest = raw.partition(".")
+            if not rest:                       # bare name: same file first
+                hits = index.get(raw, [])
+                for q in hits:
+                    out.append((mod, q))
+                if hits or raw not in aliases:
+                    continue                   # else: an imported function
+            elif head in ("self", "cls") and info.cls:
+                meth = f"{info.cls}.{rest}"
+                if (mod, meth) in self.functions:
+                    out.append((mod, meth))
+                continue
+            full = self._expand(aliases, raw) or raw
+            parts = full.split(".")
+            for i in range(len(parts) - 1, 0, -1):
+                mcand = ".".join(parts[:i])
+                if mcand in self.name_index:
+                    fname = parts[-1]
+                    for q in self.name_index[mcand].get(fname, []):
+                        out.append((mcand, q))
+                    break
+        return out

@@ -1,0 +1,54 @@
+"""obs-isolation (OBS0xx): telemetry stays out of the traced world.
+
+The DESIGN.md §9 contract is that ``repro.obs`` is host-side *by
+construction*: hooks run around jitted programs, never inside them, so
+telemetry can never perturb lowered HLO or served tokens.  The structural
+half of that contract is an import rule — kernel and model modules (the
+code that *is* the traced program) must not import ``repro.obs`` at all;
+instrumentation belongs in the dispatch/serve layers (``core.backend``,
+``serve.engine``, ``hardware.autotune``), which are the host-side callers.
+
+OBS001 flags any ``repro.obs`` import in a file under a ``kernels`` or
+``models`` directory (package-level or inside a function).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from ..core import Checker, FileContext, Finding, register_checker
+
+_GUARDED_DIRS = {"kernels", "models"}
+
+
+@register_checker
+class ObsIsolationChecker(Checker):
+    category = "obs-isolation"
+    rules = {
+        "OBS001": "repro.obs imported from a kernel/model module",
+    }
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        parts = set(pathlib.PurePosixPath(ctx.rel).parts[:-1])
+        if not (parts & _GUARDED_DIRS):
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            hit = False
+            if isinstance(node, ast.Import):
+                hit = any(a.name == "repro.obs" or
+                          a.name.startswith("repro.obs.")
+                          for a in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                hit = (mod == "repro.obs" or mod.startswith("repro.obs.")
+                       or (mod == "repro" and
+                           any(a.name == "obs" for a in node.names)))
+            if hit:
+                findings.append(ctx.finding(
+                    node, "OBS001",
+                    "kernel/model modules are the traced program — "
+                    "telemetry hooks belong in the host-side dispatch "
+                    "layer (core.backend / serve.engine), DESIGN.md §9"))
+        return findings

@@ -1,0 +1,70 @@
+"""repo-hygiene (HYG0xx): bytecode and cache artifacts never ship.
+
+  * HYG001 — a ``.pyc`` file, ``__pycache__/`` entry, or
+    ``.pytest_cache/`` entry is tracked by git.  A committed ``.pyc``
+    shadows its source on some import paths and carries a stale bytecode
+    version; this rule keeps the tree permanently clean of them.
+  * HYG002 — ``.gitignore`` is missing one of the hygiene patterns
+    (``__pycache__/``, ``*.pyc``, ``.pytest_cache/``), i.e. the next
+    ``git add -A`` *would* track them.
+
+Both run only in repo mode (``repo_checks=True``, the CLI default) —
+fixture trees in tests opt out.
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+from typing import List, Optional
+
+from ..core import Checker, Finding, register_checker
+
+_PATTERNS = ("__pycache__/", "*.pyc", ".pytest_cache/")
+
+
+def tracked_files(root: pathlib.Path) -> Optional[List[str]]:
+    """git-tracked paths under ``root``; None when git is unavailable or
+    ``root`` is not a work tree (the rule then skips, never guesses)."""
+    try:
+        out = subprocess.run(
+            ["git", "-C", str(root), "ls-files"],
+            capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0:
+        return None
+    return out.stdout.splitlines()
+
+
+@register_checker
+class RepoHygieneChecker(Checker):
+    category = "repo-hygiene"
+    rules = {
+        "HYG001": "bytecode/cache artifact tracked by git",
+        "HYG002": ".gitignore missing a hygiene pattern",
+    }
+
+    def finalize(self, run) -> List[Finding]:
+        if not run.repo_checks:
+            return []
+        findings: List[Finding] = []
+        tracked = tracked_files(run.root)
+        for path in tracked or []:
+            parts = pathlib.PurePosixPath(path).parts
+            if path.endswith(".pyc") or "__pycache__" in parts or \
+                    ".pytest_cache" in parts:
+                findings.append(Finding(
+                    path=path, line=0, rule="HYG001",
+                    message="tracked bytecode/cache artifact — "
+                            "`git rm --cached` it; .gitignore covers it",
+                    snippet=path))
+        gi = run.root / ".gitignore"
+        lines = gi.read_text().splitlines() if gi.is_file() else []
+        present = {ln.strip() for ln in lines if not ln.startswith("#")}
+        for pat in _PATTERNS:
+            if pat not in present:
+                findings.append(Finding(
+                    path=".gitignore", line=0, rule="HYG002",
+                    message=f"missing hygiene pattern {pat!r}",
+                    snippet=pat))
+        return findings

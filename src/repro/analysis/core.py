@@ -1,0 +1,342 @@
+"""smelint framework: file contexts, checker registry, suppressions,
+baseline filtering, and the two-phase run driver (DESIGN.md §10).
+
+A checker is a class registered with :func:`register_checker`; each run
+instantiates every registered checker fresh (checkers keep per-run state)
+and drives three phases:
+
+  1. ``collect(ctx)``  — once per file, in path order: gather cross-file
+     facts (function tables, module markings) but emit nothing;
+  2. ``check(ctx)``    — once per file: emit per-file findings;
+  3. ``finalize(run)`` — once per run: emit findings that need the whole
+     scan (jit reachability, exact-vs-non-exact import edges, repo-level
+     hygiene).
+
+Suppressions: ``# smelint: disable=RULE1,RULE2`` inline on the flagged
+line, or on a comment-only line to suppress the line below it.
+``# smelint: disable-file=RULE`` anywhere suppresses the rule for the
+whole file.  ``disable=all`` suppresses every rule.
+
+Module markings (the exact/non-exact convention, DESIGN.md §10): a
+``# smelint: exact-module`` comment marks a module as part of the exact
+numerics core — the EXA rules apply to it and it may never import a
+module marked ``# smelint: non-exact-module`` (the convention the future
+noisy crossbar-sim backend uses to stay visibly outside the exact path).
+A ``# smelint: trace-time`` comment on (or directly above) a ``def``
+marks a *host-side dispatch boundary*: the function runs at trace time by
+design (e.g. ``sme_apply`` resolving backends/env before staging a jitted
+call), so the jit-hygiene reachability walk stops at it.
+
+Baseline: a JSON map of finding fingerprint -> count.  Fingerprints hash
+(relative path, rule, normalized source line) — not line *numbers* — so
+unrelated edits don't invalidate the baseline.  Filtering drops up to
+``count`` matching findings per fingerprint; anything beyond is new and
+gates.  This repo commits an empty baseline (all findings were fixed, not
+baselined); the mechanism exists so future rules can land without
+blocking on historical debt.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding", "FileContext", "Checker", "AnalysisRun", "register_checker",
+    "all_rules", "run_analysis", "load_baseline", "write_baseline",
+    "DEFAULT_PATHS", "BASELINE_VERSION",
+]
+
+DEFAULT_PATHS: Tuple[str, ...] = ("src", "benchmarks", "examples")
+EXCLUDE_DIRS = {"__pycache__", ".git", ".pytest_cache", ".hypothesis",
+                "node_modules", "tests"}
+BASELINE_VERSION = 1
+
+# Pragmas are matched against *comment tokens* (via tokenize), anchored at
+# the comment start — mentions inside docstrings or string literals are
+# inert, so checker documentation can quote its own syntax safely.
+_DIRECTIVE = re.compile(
+    r"#\s*smelint:\s*(disable|disable-file)\s*=\s*([A-Za-z0-9_*,\s-]+)")
+_MARKING = re.compile(
+    r"#\s*smelint:\s*(exact-module|non-exact-module)\s*$")
+_TRACE_TIME = re.compile(r"#\s*smelint:\s*trace-time\s*$")
+
+
+# ------------------------------------------------------------------ findings
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a rule violation at a source location."""
+
+    path: str          # repo-relative posix path
+    line: int          # 1-based; 0 = whole-file / repo-level finding
+    rule: str          # stable ID, e.g. "JIT001"
+    message: str
+    snippet: str = ""  # stripped source line (fingerprint input)
+
+    @property
+    def fingerprint(self) -> str:
+        raw = f"{self.path}::{self.rule}::{self.snippet}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "rule": self.rule,
+                "message": self.message, "snippet": self.snippet,
+                "fingerprint": self.fingerprint}
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule}: {self.message}"
+
+
+# ------------------------------------------------------------- file context
+class FileContext:
+    """One parsed source file plus its suppression/marking side tables."""
+
+    def __init__(self, root: pathlib.Path, path: pathlib.Path):
+        self.root = root
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.source = path.read_text(encoding="utf-8")
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.module = self._module_name()
+        self.file_suppressions: Set[str] = set()
+        #: line -> rule IDs suppressed at that line
+        self.suppressions: Dict[int, Set[str]] = {}
+        self.markings: Set[str] = set()
+        #: lines carrying `# smelint: trace-time` (host-side dispatch
+        #: boundary for the jit-hygiene reachability walk)
+        self.trace_time_lines: Set[int] = set()
+        self._scan_comments()
+
+    def _module_name(self) -> str:
+        parts = list(pathlib.PurePosixPath(self.rel).parts)
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _iter_comments(self) -> Iterable[Tuple[int, int, str]]:
+        """(line, col, text) for every real comment token in the file."""
+        reader = io.StringIO(self.source).readline
+        try:
+            for tok in tokenize.generate_tokens(reader):
+                if tok.type == tokenize.COMMENT:
+                    yield tok.start[0], tok.start[1], tok.string
+        except (tokenize.TokenError, IndentationError):
+            return
+
+    def _scan_comments(self) -> None:
+        for i, col, comment in self._iter_comments():
+            mark = _MARKING.match(comment)
+            if mark:
+                self.markings.add(mark.group(1))
+            if _TRACE_TIME.match(comment):
+                self.trace_time_lines.add(i)
+            m = _DIRECTIVE.match(comment)
+            if not m:
+                continue
+            rules = {r.strip().upper() for r in m.group(2).split(",")
+                     if r.strip()}
+            if m.group(1) == "disable-file":
+                self.file_suppressions |= rules
+            elif self.lines[i - 1][:col].strip() == "":
+                # comment-only line: applies to the next line
+                self.suppressions.setdefault(i + 1, set()).update(rules)
+            else:
+                self.suppressions.setdefault(i, set()).update(rules)
+
+    # -- helpers for checkers ---------------------------------------------
+    @property
+    def is_exact_module(self) -> bool:
+        return "exact-module" in self.markings
+
+    @property
+    def is_non_exact_module(self) -> bool:
+        return "non-exact-module" in self.markings
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, node_or_line, rule: str, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 0))
+        return Finding(path=self.rel, line=line, rule=rule, message=message,
+                       snippet=self.snippet(line))
+
+    def suppressed(self, finding: Finding) -> bool:
+        for ruleset in (self.file_suppressions,
+                        self.suppressions.get(finding.line, ())):
+            if finding.rule in ruleset or "ALL" in ruleset:
+                return True
+        return False
+
+
+# ------------------------------------------------------------------ checkers
+class Checker:
+    """Base checker.  Subclasses set ``category`` and ``rules`` (rule ID ->
+    one-line description) and override any of the three phases."""
+
+    category: str = ""
+    rules: Dict[str, str] = {}
+
+    def collect(self, ctx: FileContext) -> None:
+        pass
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        return []
+
+    def finalize(self, run: "AnalysisRun") -> List[Finding]:
+        return []
+
+
+_CHECKERS: List[type] = []
+
+
+def register_checker(cls):
+    """Class decorator: add a Checker subclass to the registry."""
+    if not cls.rules:
+        raise ValueError(f"{cls.__name__} declares no rules")
+    _CHECKERS.append(cls)
+    return cls
+
+
+def _ensure_checkers_loaded() -> None:
+    from . import checkers  # noqa: F401  (registers on import)
+
+
+def all_rules() -> Dict[str, Tuple[str, str]]:
+    """rule ID -> (category, description), over every registered checker."""
+    _ensure_checkers_loaded()
+    out: Dict[str, Tuple[str, str]] = {}
+    for cls in _CHECKERS:
+        for rid, desc in cls.rules.items():
+            out[rid] = (cls.category, desc)
+    return dict(sorted(out.items()))
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path) -> Dict[str, int]:
+    doc = json.loads(pathlib.Path(path).read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path}: version {doc.get('version')!r} != "
+            f"{BASELINE_VERSION}")
+    return {str(k): int(v) for k, v in doc.get("entries", {}).items()}
+
+
+def write_baseline(path, findings: Sequence[Finding]) -> None:
+    entries: Dict[str, int] = {}
+    for f in findings:
+        entries[f.fingerprint] = entries.get(f.fingerprint, 0) + 1
+    doc = {"version": BASELINE_VERSION,
+           "entries": dict(sorted(entries.items()))}
+    pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+
+
+def _apply_baseline(findings: List[Finding],
+                    baseline: Dict[str, int]) -> Tuple[List[Finding], int]:
+    budget = dict(baseline)
+    active: List[Finding] = []
+    dropped = 0
+    for f in findings:
+        if budget.get(f.fingerprint, 0) > 0:
+            budget[f.fingerprint] -= 1
+            dropped += 1
+        else:
+            active.append(f)
+    return active, dropped
+
+
+# ----------------------------------------------------------------- run driver
+@dataclasses.dataclass
+class AnalysisRun:
+    """State shared across phases + the run result."""
+
+    root: pathlib.Path
+    repo_checks: bool = True
+    files: List[FileContext] = dataclasses.field(default_factory=list)
+    #: module name -> FileContext for every scanned file
+    modules: Dict[str, FileContext] = dataclasses.field(default_factory=dict)
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    errors: List[str] = dataclasses.field(default_factory=list)
+    suppressed: int = 0
+    baselined: int = 0
+
+
+def _iter_py_files(root: pathlib.Path,
+                   paths: Sequence[str]) -> Iterable[pathlib.Path]:
+    seen = set()
+    for p in paths:
+        base = (root / p) if not pathlib.Path(p).is_absolute() \
+            else pathlib.Path(p)
+        if base.is_file() and base.suffix == ".py":
+            if base not in seen:
+                seen.add(base)
+                yield base
+            continue
+        if not base.is_dir():
+            continue
+        for f in sorted(base.rglob("*.py")):
+            if any(part in EXCLUDE_DIRS for part in
+                   f.relative_to(base).parts[:-1]):
+                continue
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def run_analysis(root, paths: Optional[Sequence[str]] = None,
+                 baseline: Optional[Dict[str, int]] = None,
+                 repo_checks: bool = True) -> AnalysisRun:
+    """Run every registered checker over ``paths`` (default: src,
+    benchmarks, examples under ``root``).  Returns an :class:`AnalysisRun`
+    whose ``findings`` are the active (non-suppressed, non-baselined)
+    diagnostics, sorted by (path, line, rule)."""
+    _ensure_checkers_loaded()
+    root = pathlib.Path(root).resolve()
+    run = AnalysisRun(root=root, repo_checks=repo_checks)
+    checkers = [cls() for cls in _CHECKERS]
+
+    for path in _iter_py_files(root, paths or DEFAULT_PATHS):
+        try:
+            ctx = FileContext(root, path)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            run.errors.append(f"{path}: {e}")
+            continue
+        run.files.append(ctx)
+        run.modules[ctx.module] = ctx
+
+    raw: List[Finding] = []
+    for ctx in run.files:
+        for ch in checkers:
+            ch.collect(ctx)
+    for ctx in run.files:
+        for ch in checkers:
+            raw.extend(ch.check(ctx))
+    for ch in checkers:
+        raw.extend(ch.finalize(run))
+
+    kept: List[Finding] = []
+    for f in raw:
+        ctx = next((c for c in run.files if c.rel == f.path), None)
+        if ctx is not None and ctx.suppressed(f):
+            run.suppressed += 1
+        else:
+            kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    if baseline:
+        kept, run.baselined = _apply_baseline(kept, baseline)
+    run.findings = kept
+    return run

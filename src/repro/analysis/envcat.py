@@ -1,0 +1,89 @@
+"""The one authoritative catalog of ``SME_*`` environment variables.
+
+Every ``os.environ``/``os.getenv`` read of an ``SME_*`` name anywhere in
+``src``/``benchmarks``/``examples`` must have an entry here — rule ENV001
+(:mod:`repro.analysis.checkers.env_registry`) enforces it, so a new knob
+cannot ship undocumented.  The DESIGN.md §10 table is generated from this
+module (``python -m repro.analysis.envcat``); ``tests/test_analysis.py``
+keeps the two in sync and checks every entry is actually read somewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+__all__ = ["EnvVar", "CATALOG", "markdown_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvVar:
+    name: str
+    default: str          # effective default when unset
+    values: str           # accepted values / format
+    consumers: Tuple[str, ...]  # modules that read it
+    doc: str              # one-line description
+
+
+def _entry(name, default, values, consumers, doc) -> Tuple[str, EnvVar]:
+    return name, EnvVar(name, default, values, tuple(consumers), doc)
+
+
+CATALOG: Dict[str, EnvVar] = dict([
+    _entry(
+        "SME_BACKEND", "auto", "auto | xla | v1 | v2 | v3",
+        ("repro.core.backend", "repro.launch.serve"),
+        "Process-default SME execution backend; the bottom of the "
+        "resolution stack (explicit arg > use_backend context > this > "
+        "auto heuristics).  Read once at import for the default stack and "
+        "by launch/serve for its --backend default."),
+    _entry(
+        "SME_BM", "128", "positive int",
+        ("repro.core.backend",),
+        "Kernel M block-size fallback consulted by resolve_block_m after "
+        "the use_block context and the autotune cache; non-digit or "
+        "non-positive values are ignored."),
+    _entry(
+        "SME_DECODE_KERNEL", "auto",
+        "auto | on/1/always | off/0/never",
+        ("repro.core.backend", "benchmarks.kernel_bench"),
+        "v3 shape-dispatch mode for the GEMV decode kernel: auto uses it "
+        "when 2*M <= bm, on whenever M fits one tile, off never.  Read at "
+        "trace time per dispatch; kernel_bench saves/restores it around "
+        "its forced-path sweeps."),
+    _entry(
+        "SME_TELEMETRY", "1", "0/off/false/no disable; anything else on",
+        ("repro.obs.metrics",),
+        "Process default for the telemetry gate obs.enabled(); "
+        "set_enabled() overrides it at runtime.  Host-side only — tokens "
+        "and lowered HLO are bit-identical either way (tested)."),
+    _entry(
+        "SME_AUTOTUNE_CACHE", "(unset: no cache)", "path to a JSON cache",
+        ("repro.hardware.autotune", "benchmarks.kernel_bench"),
+        "Measured-timing autotune cache lazily loaded on first "
+        "get_cache(); feeds resolve_block_m and the compiler's "
+        "measured candidate pricing.  kernel_bench also uses it as the "
+        "default save path for its sweep."),
+    _entry(
+        "SME_BENCH_JSON", "BENCH_kernels.json", "output path",
+        ("benchmarks.run",),
+        "Where benchmarks.run writes the machine-readable suite report "
+        "(rows + errors + per-suite telemetry delta) beside the CSV on "
+        "stdout; CI points it at per-job artifact names."),
+])
+
+
+def markdown_table() -> str:
+    """The DESIGN.md env-var table (regenerate with
+    ``python -m repro.analysis.envcat``)."""
+    rows = ["| Variable | Default | Values | Read by | Purpose |",
+            "|---|---|---|---|---|"]
+    for var in CATALOG.values():
+        consumers = ", ".join(f"`{c}`" for c in var.consumers)
+        values = var.values.replace("|", "\\|")  # literal | inside a cell
+        rows.append(f"| `{var.name}` | `{var.default}` | {values} "
+                    f"| {consumers} | {var.doc} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

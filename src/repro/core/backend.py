@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Unified SME execution-backend layer (DESIGN.md §3).
 
 One registry behind which the three execution paths for an SME-compressed
@@ -750,6 +751,7 @@ def _constrain_features(y: jax.Array) -> jax.Array:
     return constrain(y, "features")
 
 
+# smelint: trace-time
 def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
               *, out_dtype=None, bm: Optional[int] = None,
               interpret: Optional[bool] = None) -> jax.Array:

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Inter-crossbar bit-slicing (paper §III-B).
 
 A quantized weight matrix (codewords ``codes[K, N]``) is sliced into ``Nq``

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """SME <-> model integration: convert any model's linear weights to the
 packed SME format and serve them through the same model code.
 

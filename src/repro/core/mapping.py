@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Crossbar mapping & resource counting (paper §III-B/C, Figs. 8/11/12).
 
 Two mapping disciplines are modeled:

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Minifloat-6 re-encoding of squeezed SME codes (kernel v2, §Perf C).
 
 The S-window property means a squeezed SME codeword has at most S

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Quantizers used by the SME pipeline (paper §III-A, Fig. 2/4/9).
 
 All quantizers share one codeword convention:

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """End-to-end SME weight pipeline (paper §III, steps 1-3) + packed formats.
 
 ``sme_compress`` runs quantize -> bit-slice -> squeeze-out and returns an

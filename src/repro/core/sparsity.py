@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Bit-level sparsity statistics (paper Figs. 2, 4, 5).
 
 Besides the per-*bit* densities of the paper figures, this module exposes

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Bit-wise squeeze-out scheme (paper §III-C).
 
 Per crossbar group (= per 128x128 tile position), iteratively:

@@ -34,7 +34,7 @@ class Prefetcher:
                 if self._stop.is_set():
                     return
                 self._q.put(item)
-        except BaseException as e:  # surfaced on next()
+        except BaseException as e:  # smelint: disable=EXC001 — producer thread: stored and re-raised on __next__()
             self._exc = e
         finally:
             self._q.put(None)

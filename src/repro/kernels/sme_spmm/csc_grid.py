@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Shared scaffolding for the CSC-of-tiles Pallas kernels (DESIGN.md §2).
 
 All three SME kernels (``sme_spmm`` v1 bytecode, ``sme_spmm6`` v2

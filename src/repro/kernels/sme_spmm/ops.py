@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Compat wrappers around the unified SME execution-backend layer.
 
 Packing and dispatch now live in :mod:`repro.core.backend` (DESIGN.md §3);

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Pure-jnp/numpy oracle for the ``sme_spmm`` kernel."""
 from __future__ import annotations
 

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Pallas TPU kernel: SME packed block-sparse dequant-matmul.
 
 Computes ``y[M, N] = x[M, K] @ W_eff`` where ``W_eff`` is an SME-compressed

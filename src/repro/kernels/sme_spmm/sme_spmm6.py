@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Pallas TPU kernel v2: minifloat-6 block-sparse dequant-matmul.
 
 Same CSC-of-tiles structure as ``sme_spmm`` (v1) but the weight payload is

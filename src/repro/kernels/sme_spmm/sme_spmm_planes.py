@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Pallas TPU kernel v3: plane-CSC block-sparse dequant-matmul.
 
 The unit of storage, DMA and skipping is the *(bit-plane, tile)* pair —

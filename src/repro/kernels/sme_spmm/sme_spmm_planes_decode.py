@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Pallas TPU kernel v3-decode: GEMV-shaped plane-CSC dequant-matmul.
 
 Decode is the serving hot path — activations are ``[B, 1]`` reshaped to a

@@ -295,7 +295,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                       "alias_size_in_bytes"):
                 if hasattr(ma, k):
                     mem[k] = int(getattr(ma, k))
-        except Exception as e:  # CPU backend may not support it
+        except (RuntimeError, NotImplementedError, AttributeError) as e:
+            # CPU backend may not support memory_analysis
             mem["error"] = str(e)
         mem["analytic_arg_bytes_per_dev"] = int(meta["arg_bytes_per_dev"])
 
@@ -398,7 +399,7 @@ def main():
                 continue
             try:
                 rec = run_cell(args.arch, s, m, args.variant)
-            except Exception:
+            except Exception:  # smelint: disable=EXC001 — sweep driver: any cell failure becomes an error record, the sweep continues
                 rec = {"arch": args.arch, "shape": s, "mesh": m,
                        "status": "error", "trace": traceback.format_exc()[-6000:]}
             path.write_text(json.dumps(rec, indent=2, default=str))

@@ -1,3 +1,4 @@
+# smelint: exact-module
 """Activation-sharding policy (Megatron TP / SP selection per arch x phase).
 
 Models call :func:`constrain` at a few key points (embed output, block

@@ -89,8 +89,8 @@ class _AsyncWriter:
         def run():
             try:
                 fn()
-            except BaseException as e:  # pragma: no cover
-                self._err = e
+            except BaseException as e:  # smelint: disable=EXC001 — writer thread: stored and re-raised on wait()
+                self._err = e  # pragma: no cover
 
         self._t = threading.Thread(target=run, daemon=True)
         self._t.start()

@@ -1,0 +1,40 @@
+"""Fixture: backend-contract violations (BCK001).
+
+Mirrors the real registry shape: a local abstract base providing concrete
+``pad_hint``/``pack_block_key`` defaults, registered subclasses missing
+parts of the dispatch surface.  Parsed only, never executed.
+"""
+from repro.core.backend import register_backend
+
+
+class FixtureBase:
+    name = ""
+    OPERANDS = ()
+
+    def pack_weight(self, smew, pad_to=None):
+        raise NotImplementedError
+
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+        raise NotImplementedError
+
+    def pad_hint(self, smew):
+        return 1
+
+    def pack_block_key(self, bm):
+        return None
+
+
+@register_backend
+class BrokenBackend(FixtureBase):
+    """Has operands but inherits only the abstract matmul2d -> BCK001."""
+
+    name = "broken-fixture"
+    OPERANDS = ("codes",)
+
+    def pack_weight(self, smew, pad_to=None):
+        return {}
+
+
+@register_backend
+class AnonymousBackend(FixtureBase):
+    """Operand-free (xla-style) but no non-empty name -> BCK001."""

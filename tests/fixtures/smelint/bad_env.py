@@ -1,0 +1,12 @@
+"""Fixture: undeclared SME_* env knobs (ENV001).
+
+Parsed by tests/test_analysis.py, never imported or executed.
+"""
+import os
+
+SECRET = os.environ.get("SME_SECRET_KNOB", "0")   # ENV001: not in catalog
+ALSO = os.getenv("SME_OTHER_KNOB")                # ENV001: not in catalog
+SUB = os.environ["SME_THIRD_KNOB"]                # ENV001: subscript read
+OK = os.environ.get("SME_BACKEND", "auto")        # declared: no finding
+NOT_OURS = os.environ.get("HOME")                 # non-SME: no finding
+os.environ["SME_FOURTH_KNOB"] = "1"               # write: no finding

@@ -1,0 +1,26 @@
+"""Fixture: exactness violations (EXA001-EXA003).
+
+Parsed by tests/test_analysis.py, never imported or executed.
+"""
+# smelint: exact-module
+import jax
+import jax.numpy as jnp
+
+
+def pool(x):
+    s = jnp.sum(x, axis=-1)                        # EXA001: no dtype
+    m = jnp.mean(x)                                # EXA001: no dtype
+    ok = jnp.sum(x, axis=-1, dtype=jnp.float32)    # explicit: no finding
+    return s + m + ok
+
+
+def rescale(x):
+    return x / 3.0                                 # EXA002: non-pow2
+
+
+def half(x):
+    return x / 2.0                                 # pow2: no finding
+
+
+def shard(y, spec):
+    return jax.lax.with_sharding_constraint(y, spec)   # EXA003

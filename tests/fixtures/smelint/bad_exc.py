@@ -1,0 +1,44 @@
+"""Fixture: broad exception handlers (EXC001).
+
+Parsed by tests/test_analysis.py, never imported or executed.
+"""
+
+
+def risky():
+    raise ValueError("boom")
+
+
+def swallow():
+    try:
+        risky()
+    except Exception:                        # EXC001
+        pass
+
+
+def bare():
+    try:
+        risky()
+    except:                                  # noqa: E722  EXC001
+        pass
+
+
+def tupled():
+    try:
+        risky()
+    except (ValueError, BaseException):      # EXC001: tuple hides broad
+        pass
+
+
+def fine():
+    try:
+        risky()
+    except ValueError:                       # specific: no finding
+        pass
+
+
+def reraises():
+    try:
+        risky()
+    except Exception:                        # re-raised: no finding
+        print("context")
+        raise

@@ -1,0 +1,42 @@
+"""Fixture: jit-hygiene violations (JIT001-JIT004).
+
+Parsed by tests/test_analysis.py, never imported or executed.
+"""
+import functools
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def helper(x):
+    return os.getenv("REPRO_MODE")            # JIT001 via reachability
+
+
+@jax.jit
+def traced(x, flag):
+    mode = os.environ.get("REPRO_MODE", "a")  # JIT001
+    t0 = time.time()                          # JIT002
+    host = np.asarray(x)                      # JIT003
+    f = float(flag)                           # JIT003: cast on traced param
+    if flag > 0:                              # JIT004
+        host = host + t0 + f
+    return helper(host), mode
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sized(x, n):
+    if n > 2:                                 # static: no finding
+        return x * 2
+    return x
+
+
+# smelint: trace-time
+def dispatch(x):
+    return os.environ.get("REPRO_DISPATCH", "auto")   # barrier: no finding
+
+
+@jax.jit
+def staged(x):
+    return dispatch(x)

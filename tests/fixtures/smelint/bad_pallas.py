@@ -1,0 +1,31 @@
+"""Fixture: pallas-kernel violations (PLK001-PLK003).
+
+Parsed by tests/test_analysis.py, never imported or executed.
+"""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def kernel_dead_copy(x_ref, o_ref, sem):
+    dma = pltpu.make_async_copy(x_ref, o_ref, sem)    # PLK001: never started
+    return dma
+
+
+def kernel_race(x_ref, o_ref, sem):
+    pltpu.make_async_copy(x_ref, o_ref, sem).start()  # PLK001: no wait
+
+
+def _k(a_ref, o_ref):
+    o_ref[...] = a_ref[...]
+
+
+def call(x):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],  # PLK002: arity
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(_k, grid_spec=grid_spec,
+                          interpret=True)(x)  # PLK002 kernel sig + PLK003

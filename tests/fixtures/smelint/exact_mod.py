@@ -1,0 +1,5 @@
+"""Fixture: an exact module importing a non-exact module (EXA004)."""
+# smelint: exact-module
+import noisy_mod                                   # EXA004
+
+SCALE = getattr(noisy_mod, "NOISE", 0.0)

@@ -1,0 +1,13 @@
+"""Fixture: telemetry import inside a model module (OBS001).
+
+Lives under a ``models/`` directory on purpose — the path triggers the
+isolation rule.  Parsed only, never executed.
+"""
+from repro import obs                              # OBS001
+from repro.obs import REGISTRY                     # OBS001
+
+
+def layer(x):
+    obs.observe("models/x", x)
+    REGISTRY.flat_values()
+    return x

@@ -1,0 +1,4 @@
+"""Fixture: the non-exact marking a crossbar-noise-style module carries."""
+# smelint: non-exact-module
+
+NOISE = 0.25

@@ -1,0 +1,16 @@
+"""Fixture: suppression directives silence findings (counted, not shown)."""
+
+
+def inline_form():
+    try:
+        pass
+    except Exception:  # smelint: disable=EXC001 — fixture: justified
+        pass
+
+
+def next_line_form():
+    try:
+        pass
+    # smelint: disable=EXC001
+    except Exception:
+        pass

@@ -1,0 +1,6 @@
+"""Fixture: file-wide suppression via ``disable-file``."""
+# smelint: disable-file=ENV001
+import os
+
+KNOB = os.environ.get("SME_FILEWIDE_KNOB")   # suppressed file-wide
+OTHER = os.getenv("SME_FILEWIDE_OTHER")      # suppressed file-wide

@@ -1,0 +1,180 @@
+"""Tests for repro.analysis (smelint): rule firing on fixtures, the
+suppression and baseline mechanisms, the CLI contract, the env-var
+catalog, and — the actual CI gate — that the repo itself scans clean.
+
+The fixture tree under ``tests/fixtures/smelint/`` is deliberately full
+of violations; it is parsed by the analyzer, never imported.  None of
+these tests need jax: the analysis package is pure stdlib.
+"""
+import collections
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "smelint"
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import envcat                              # noqa: E402
+from repro.analysis.checkers.env_registry import env_reads     # noqa: E402
+from repro.analysis.core import (Finding, all_rules,           # noqa: E402
+                                 load_baseline, run_analysis,
+                                 write_baseline)
+
+#: (path, rule) -> expected finding count over the fixture tree
+EXPECTED = {
+    ("bad_backend.py", "BCK001"): 2,
+    ("bad_env.py", "ENV001"): 3,
+    ("bad_exact.py", "EXA001"): 2,
+    ("bad_exact.py", "EXA002"): 1,
+    ("bad_exact.py", "EXA003"): 1,
+    ("exact_mod.py", "EXA004"): 1,
+    ("bad_exc.py", "EXC001"): 3,
+    ("bad_jit.py", "JIT001"): 2,
+    ("bad_jit.py", "JIT002"): 1,
+    ("bad_jit.py", "JIT003"): 2,
+    ("bad_jit.py", "JIT004"): 1,
+    ("bad_pallas.py", "PLK001"): 2,
+    ("bad_pallas.py", "PLK002"): 2,
+    ("bad_pallas.py", "PLK003"): 1,
+    ("models/bad_obs.py", "OBS001"): 2,
+}
+
+
+@pytest.fixture(scope="module")
+def fixture_run():
+    return run_analysis(FIXTURES, paths=["."], repo_checks=False)
+
+
+def test_fixture_rule_ids_exact(fixture_run):
+    got = collections.Counter(
+        (f.path, f.rule) for f in fixture_run.findings)
+    assert dict(got) == EXPECTED
+    assert not fixture_run.errors
+
+
+def test_every_rule_has_fixture_coverage(fixture_run):
+    """Each checker's primary rules fire on at least one fixture (HYG runs
+    only in repo mode and is exercised separately)."""
+    fired = {f.rule for f in fixture_run.findings}
+    declared = set(all_rules()) - {"HYG001", "HYG002"}
+    assert declared == fired
+
+
+def test_suppressions_counted_not_reported(fixture_run):
+    paths = {f.path for f in fixture_run.findings}
+    assert "suppressed.py" not in paths
+    assert "suppressed_file.py" not in paths
+    # 2 inline/next-line EXC001 + 2 file-wide ENV001
+    assert fixture_run.suppressed == 4
+
+
+def test_trace_time_and_static_exemptions(fixture_run):
+    """The trace-time barrier and static_argnames both silence jit rules."""
+    jit = [f for f in fixture_run.findings if f.path == "bad_jit.py"]
+    assert not any("REPRO_DISPATCH" in f.snippet for f in jit)
+    assert not any("dispatch" in f.message for f in jit)
+    assert not any("sized" in f.message for f in jit)
+
+
+def test_baseline_roundtrip(fixture_run, tmp_path):
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, fixture_run.findings)
+    budget = load_baseline(bl)
+    assert sum(budget.values()) == len(fixture_run.findings)
+    rerun = run_analysis(FIXTURES, paths=["."], repo_checks=False,
+                         baseline=budget)
+    assert rerun.findings == []
+    assert rerun.baselined == len(fixture_run.findings)
+
+
+def test_baseline_survives_line_moves(fixture_run):
+    f = fixture_run.findings[0]
+    moved = Finding(path=f.path, line=f.line + 40, rule=f.rule,
+                    message=f.message, snippet=f.snippet)
+    assert moved.fingerprint == f.fingerprint
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=str(ROOT))
+
+
+def test_cli_red_on_fixtures_with_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _cli("--root", str(FIXTURES), "--no-repo-checks",
+                "--no-baseline", "--format=json", "--out", str(out), ".")
+    assert proc.returncode == 1
+    report = json.loads(proc.stdout)
+    assert report == json.loads(out.read_text())
+    assert len(report["findings"]) == sum(EXPECTED.values())
+    assert set(all_rules()) <= set(report["rules"])
+    for f in report["findings"]:
+        assert {"path", "line", "rule", "message", "snippet",
+                "fingerprint"} <= set(f)
+
+
+def test_cli_green_on_clean_tree(tmp_path):
+    (tmp_path / "clean.py").write_text("X = 1\n")
+    proc = _cli("--root", str(tmp_path), "--no-repo-checks", ".")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in all_rules():
+        assert rid in proc.stdout
+
+
+def test_repo_scans_clean():
+    """The gate: the repo's own sources carry zero active findings."""
+    baseline = load_baseline(ROOT / "src/repro/analysis/baseline.json")
+    run = run_analysis(ROOT, baseline=baseline)
+    assert not run.errors
+    assert [f.render() for f in run.findings] == []
+
+
+def test_repo_hygiene_rules_active():
+    """HYG001/HYG002 run in repo mode and pass on this tree: nothing
+    tracked under __pycache__/.pytest_cache and .gitignore covers all."""
+    run = run_analysis(ROOT, paths=["src/repro/analysis"])
+    assert not any(f.rule.startswith("HYG") for f in run.findings)
+    gitignore = (ROOT / ".gitignore").read_text()
+    for pat in ("__pycache__/", "*.pyc", ".pytest_cache/"):
+        assert pat in gitignore
+
+
+def test_envcat_every_var_is_read_somewhere():
+    import ast
+    reads = set()
+    for base in ("src", "benchmarks", "examples"):
+        d = ROOT / base
+        if not d.is_dir():
+            continue
+        for py in d.rglob("*.py"):
+            if "analysis" in py.parts or "__pycache__" in py.parts:
+                continue
+            for name, _line in env_reads(ast.parse(py.read_text())):
+                reads.add(name)
+    for name in envcat.CATALOG:
+        assert name in reads, f"{name} declared but never read"
+
+
+def test_envcat_table_in_design_doc():
+    design = (ROOT / "DESIGN.md").read_text()
+    table = envcat.markdown_table()
+    assert table in design, \
+        "DESIGN.md env table is stale — regenerate with " \
+        "`python -m repro.analysis.envcat`"
+    for name in envcat.CATALOG:
+        assert f"`{name}`" in design
