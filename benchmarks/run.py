@@ -38,9 +38,11 @@ def _jsonable(v):
 
 
 def main() -> None:
-    from benchmarks import paper_tables, kernel_bench, roofline
+    from benchmarks import (paper_tables, kernel_bench, roofline,
+                            spec_decode_bench)
 
-    suites = paper_tables.ALL + kernel_bench.ALL + roofline.ALL
+    suites = paper_tables.ALL + kernel_bench.ALL + roofline.ALL \
+        + spec_decode_bench.ALL
     only = [a for a in sys.argv[1:] if not a.startswith("-")]
     if only:
         # substring filter on function names: `run.py shard_matrix` runs

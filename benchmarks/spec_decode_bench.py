@@ -1,0 +1,176 @@
+"""Self-speculative decode benchmarks (DESIGN.md §11).
+
+Two claims are measured and gated:
+
+  1. **Draft payload**: a depth-``k`` draft dispatch DMAs only the first
+     ``k`` plane bitmaps of every tile group (plane-CSC stores groups
+     MSB-first, so truncation is a contiguous prefix — no repack).  On
+     the layers speculation targets (magnitude-pruned, banded-reordered)
+     the modeled draft HBM bytes/token must come in **strictly below**
+     the full-precision decode payload, at the planner-chosen depth.
+  2. **Acceptance**: serving a host-pruned model with
+     ``spec_depth="auto"`` (per-layer depths from the compiler plan) must
+     accept >= 0.5 of drafted tokens, while the emitted tokens stay
+     bit-identical to the non-speculative greedy run — the §11 contract.
+
+On this CPU container wall-times are interpret-mode artifacts; bytes per
+token and the acceptance fraction are the durable numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sme import sme_compress
+
+Row = Tuple[str, float, str]
+
+# per-entry sideband bits in the plane-CSC stream: (plane, row_tile,
+# col) coordinates as 3 x i32 — matches storage_bits_per_weight's 96
+_ENTRY_META_BITS = 96
+
+
+def _draft_vs_full_bits(smew, depth: int) -> Tuple[int, int, int, int]:
+    """(full_bits, draft_bits, total_entries, kept_entries) for a layer.
+
+    Only the per-entry payload (tile bitmap + coordinates) shrinks with
+    depth; the column pointers, row-exponent sideband and sign bitmap are
+    shared with the verify pass and travel in full either way."""
+    occp = smew.plane_occupancy()
+    sizes = occp.sum(axis=0)                       # planes per tile group
+    ents = int(sizes.sum())
+    kept = int(np.minimum(sizes, max(int(depth), 1)).sum())
+    tr, tc = smew.tiled_codes.shape[-2:]
+    n_w = int(np.prod(smew.shape))
+    full_bits = smew.storage_bits_per_weight("plane_csc") * n_w
+    entry_bits = tr * tc + _ENTRY_META_BITS
+    draft_bits = full_bits - (ents - kept) * entry_bits
+    return int(round(full_bits)), int(round(draft_bits)), ents, kept
+
+
+def bench_spec_decode() -> List[Row]:
+    """Draft-vs-full payload on the target layers + end-to-end engine
+    acceptance/identity/throughput; both halves gate (RuntimeError) so a
+    regression fails benchmarks/run.py and CI."""
+    from repro.compiler.plan import draft_depth_from_occupancy, plan_model
+    from repro.compiler.reorder import plan_row_permutation
+
+    rng = np.random.default_rng(11)
+    rows: List[Row] = []
+
+    # -- 1. modeled draft HBM bytes/token ------------------------------
+    def pruned(k, n, frac):
+        w = rng.normal(0, 0.05, (k, n))
+        w[np.abs(w) < np.quantile(np.abs(w), frac)] = 0.0
+        return w
+
+    wb = rng.normal(0, 0.05, (512, 512))
+    wb *= np.where(np.arange(512) % 2 == 0, 1.0, 1 / 64.0)[:, None]
+    layers = [
+        ("pruned90_1024x1024", pruned(1024, 1024, 0.90), None),
+        ("banded_reordered_512x512", wb,
+         plan_row_permutation(wb, window=3, level="plane")),
+    ]
+    for lname, w, perm in layers:
+        smew = sme_compress(w, squeeze=1, squeeze_max=7, row_perm=perm)
+        depth = draft_depth_from_occupancy(smew)
+        full_b, draft_b, ents, kept = _draft_vs_full_bits(smew, depth)
+        rows.append((f"spec_decode/{lname}/draft_planes", depth,
+                     f"planner depth; keeps {kept} of {ents} "
+                     f"(plane, tile) entries"))
+        rows.append((f"spec_decode/{lname}/full_bytes_per_token",
+                     round(full_b / 8, 1), "full-precision plane-CSC"))
+        rows.append((f"spec_decode/{lname}/draft_bytes_per_token",
+                     round(draft_b / 8, 1),
+                     f"{draft_b / full_b:.3f}x of full payload"))
+        if depth < 1 or not draft_b < full_b:
+            raise RuntimeError(
+                f"draft payload must be strictly below full-precision "
+                f"decode on {lname}: depth={depth}, "
+                f"draft={draft_b / 8:.0f} B vs full={full_b / 8:.0f} B")
+
+    # -- 2. engine acceptance + bit-identity + tokens/s ----------------
+    from repro.configs import ARCHS, scale_down
+    from repro.core.integrate import convert_params_to_sme
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = scale_down(ARCHS["qwen1.5-0.5b"], d_model=128, d_ff=256,
+                     vocab=256)
+    api = build_model(cfg)
+    params = jax.tree.map(np.asarray, api.init_params(jax.random.key(0)))
+
+    def prune_leaf(w):
+        w = np.asarray(w)
+        if w.dtype.kind == "f" and w.ndim >= 2 and min(w.shape[-2:]) >= 128:
+            w = w.copy()
+            w[np.abs(w) < np.quantile(np.abs(w), 0.90)] = 0.0
+        return w
+
+    params = jax.tree.map(prune_leaf, params)
+    plan = plan_model(params, backend="v3")
+    depths = sorted({lp.draft_planes for lp in plan.layers.values()})
+    rows.append(("spec_decode/engine/plan_layers", len(plan.layers),
+                 f"per-layer draft depths {depths}"))
+    sme_params = convert_params_to_sme(params, squeeze=1, backend="v3",
+                                       plan=plan)
+    has_meta = any("sme_draft_planes" in str(p) for p, _ in
+                   jax.tree_util.tree_leaves_with_path(sme_params))
+    if not has_meta:
+        raise RuntimeError("plan stamped no sme_draft_planes meta — the "
+                           "auto draft depth would silently run full "
+                           "precision")
+
+    def mk_reqs():
+        r2 = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=r2.integers(0, cfg.vocab, size=5 + i % 3,
+                                           dtype=np.int32),
+                        max_new_tokens=10)
+                for i in range(3)]
+
+    base = mk_reqs()
+    eng0 = ServeEngine(api, sme_params, slots=3, s_max=48, backend="v3")
+    t0 = time.perf_counter()
+    eng0.run(base, max_steps=200)
+    base_s = time.perf_counter() - t0
+
+    spec = mk_reqs()
+    eng1 = ServeEngine(api, sme_params, slots=3, s_max=48, backend="v3",
+                       spec_depth="auto", spec_len=4)
+    t0 = time.perf_counter()
+    stats = eng1.run(spec, max_steps=200)
+    spec_s = time.perf_counter() - t0
+
+    if [r.out_tokens for r in spec] != [r.out_tokens for r in base]:
+        raise RuntimeError("speculative tokens diverged from greedy "
+                           "baseline — §11 bit-identity violated")
+    drafted = eng1._m["spec_draft_tokens"].value
+    accepted = eng1._m["spec_accepted"].value
+    if drafted <= 0:
+        raise RuntimeError("spec engine drafted no tokens")
+    acc = accepted / drafted
+    rows.append(("spec_decode/engine/acceptance_rate", round(acc, 3),
+                 f"{int(accepted)}/{int(drafted)} drafted tokens at "
+                 f"plan-chosen depths"))
+    if acc < 0.5:
+        raise RuntimeError(
+            f"acceptance {acc:.2f} below 0.5 at planner-chosen depth")
+    rows.append(("spec_decode/engine/bit_identical", 1,
+                 "spec == non-spec greedy tokens, 3 ragged requests"))
+    rows.append(("spec_decode/engine/baseline_tok_s",
+                 round(stats["tokens"] / max(base_s, 1e-9), 2),
+                 "non-speculative v3 decode (CPU interpret smoke)"))
+    rows.append(("spec_decode/engine/spec_tok_s",
+                 round(stats["tokens"] / max(spec_s, 1e-9), 2),
+                 f"draft+sequential-verify; {int(eng1._m['spec_rounds'].value)} "
+                 f"rounds (verify is per-token until chunked decode lands "
+                 f"— bytes, not walltime, is the §11 win on CPU)"))
+    return rows
+
+
+ALL = [bench_spec_decode]

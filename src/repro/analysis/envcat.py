@@ -69,6 +69,19 @@ CATALOG: Dict[str, EnvVar] = dict([
         "Where benchmarks.run writes the machine-readable suite report "
         "(rows + errors + per-suite telemetry delta) beside the CSV on "
         "stdout; CI points it at per-job artifact names."),
+    _entry(
+        "SME_SPEC_DEPTH", "(unset: speculation off)",
+        "positive int | auto",
+        ("repro.launch.serve",),
+        "Default for launch/serve --spec-depth: bit-planes kept per tile "
+        "group in the self-speculative draft pass (DESIGN.md §11); auto "
+        "reads the per-layer sme_draft_planes meta the compiler plan "
+        "stamped into the converted params."),
+    _entry(
+        "SME_SPEC_LEN", "4", "positive int",
+        ("repro.launch.serve",),
+        "Default for launch/serve --spec-len: tokens drafted per "
+        "speculative round; only consulted when speculation is on."),
 ])
 
 

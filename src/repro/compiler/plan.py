@@ -37,9 +37,10 @@ import numpy as np
 from repro.core.squeeze import squeeze_error_bound
 
 __all__ = ["Candidate", "LayerPlan", "CompilePlan", "plan_model",
-           "DEFAULT_CANDIDATES", "candidate_error_bound"]
+           "DEFAULT_CANDIDATES", "candidate_error_bound",
+           "draft_depth_from_occupancy"]
 
-PLAN_VERSION = 3
+PLAN_VERSION = 4
 
 #: (n_bits, window, squeeze[, squeeze_max]) grid searched per layer.  All
 #: stay within the uint8 code dtype; squeeze>=1 / window<=3 rows are
@@ -91,6 +92,7 @@ class Candidate:
     squeeze_max: int = 0           # per-tile free-deepening cap (0 = global)
     plane_tiles: int = 0           # occupied (plane, tile) pairs (v3 units)
     plane_reorder_gain: int = 0    # plane-tiles freed by plane-level reorder
+    draft_planes: int = 0          # speculative draft depth (0 = no draft)
 
 
 @dataclasses.dataclass
@@ -117,6 +119,9 @@ class LayerPlan:
     reorder_level: str = "tile"    # signature the permutation clusters on
     occupied_plane_tiles: int = 0  # plane-CSC entries (v3 DMA units)
     bm: int = 0                    # measured-best M block size (0 = default)
+    draft_planes: int = 0          # per-tile plane depth of the speculative
+    #                                draft pass (DESIGN.md §11); 0 = this
+    #                                layer drafts at full precision
 
     @property
     def n_weights(self) -> int:
@@ -245,6 +250,50 @@ def _storage_bytes_per_weight(smew, backend: Optional[str]) -> float:
     return smew.storage_bits_per_weight(fmt) / 8
 
 
+def draft_depth_from_occupancy(smew, coverage: float = 0.90) -> int:
+    """Per-layer draft plane-depth for self-speculative decode (§11).
+
+    The draft pass truncates every tile group to its first ``k`` entries —
+    the ``k`` most significant occupied planes — so the right ``k`` is the
+    smallest one whose kept planes carry at least ``coverage`` of the
+    layer's total *magnitude mass* (set-bit count of each occupied
+    (plane, tile) pair weighted by its splice value ``2^(Nq-1-q)``, the
+    exact quantity the truncation deletes) **and** that strictly reduces
+    the streamed plane-entry count.  Returns 0 — draft at full precision —
+    when no depth does both, e.g. uniformly deep dense layers, where a
+    truncated draft would mispredict without saving bytes.
+
+    The 0.90 default is empirical: squeeze packs pruned layers into a
+    handful of occupied planes whose last one or two still hold 5-10% of
+    the mass, so a tight bar (0.95+) degenerates to "no useful depth"
+    exactly on the layers speculation targets; at 0.90 the dropped tail
+    stays small enough that greedy drafts overwhelmingly match the
+    full-precision verify pass (gated >= 0.5 acceptance in
+    ``benchmarks/spec_decode_bench.py``).
+    """
+    occp = smew.plane_occupancy()                       # [Nq, nr, nc]
+    if not occp.any():
+        return 0
+    nq = smew.n_bits
+    mass = np.stack([
+        ((smew.tiled_codes >> (nq - 1 - q)) & 1).sum(axis=(-1, -2))
+        * 2.0 ** (nq - 1 - q)
+        for q in range(nq)])                            # [Nq, nr, nc]
+    total_mass = float(mass.sum())
+    if total_mass <= 0.0:
+        return 0
+    rank = np.cumsum(occp, axis=0) - occp      # occupied planes before q
+    sizes = occp.sum(axis=0)                   # group depth per tile
+    total_entries = int(sizes.sum())
+    for k in range(1, int(sizes.max()) + 1):
+        if int(np.minimum(sizes, k).sum()) >= total_entries:
+            return 0                           # k covers every group: no
+            #                                    byte saving at any depth
+        if float(mass[rank < k].sum()) / total_mass >= coverage:
+            return k
+    return 0
+
+
 def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
                     tile, backend: Optional[str], reorder_gain: int = 0,
                     squeeze_max: int = 0, plane_reorder_gain: int = 0,
@@ -264,7 +313,10 @@ def _evaluate_trial(w2d: np.ndarray, n_bits: int, window: int, squeeze: int,
         crossbars=smew.crossbars_used(), backend=be,
         tiles=int(smew.occupancy.sum()), reorder_gain=reorder_gain,
         squeeze_max=squeeze_max, plane_tiles=smew.plane_tiles_used(),
-        plane_reorder_gain=plane_reorder_gain)
+        plane_reorder_gain=plane_reorder_gain,
+        # only plane-CSC can truncate a dispatch; measured occupancy is
+        # exactly what prices the draft depth (trial mode only)
+        draft_planes=draft_depth_from_occupancy(smew) if be == "v3" else 0)
 
 
 def _evaluate_analytic(shape, n_bits: int, window: int, squeeze: int,
@@ -531,6 +583,7 @@ def plan_model(params, error_budget: float = 0.05,
             - (max(c.plane_reorder_gain, 0) if (level == "plane"
                                                 and gain > 0) else 0),
             bm=bm,
+            draft_planes=c.draft_planes if c.backend == "v3" else 0,
         )
     return CompilePlan(layers=layers, tile=tile, error_budget=error_budget,
                        objective=objective)

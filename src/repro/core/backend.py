@@ -61,6 +61,7 @@ _TILESQ_KEY = "sme_tilesq"
 __all__ = [
     "SMEBackend", "register_backend", "get_backend", "available_backends",
     "default_backend", "set_default_backend", "use_backend", "use_block",
+    "use_spec_depth", "resolve_spec_depth",
     "resolve_backend", "resolve_block_m", "sme_apply",
     "smeweight_from_param", "pack_param_operands", "operand_keys",
     "ensure_operands", "clear_operand_cache",
@@ -152,11 +153,30 @@ class SMEBackend:
         with it, so a new bm repacks instead of serving stale operands."""
         return None
 
+    def pack_depth_key(self, plane_depth):
+        """Part of the operand-cache key that depends on the dispatch
+        plane-depth (truncated drafts, DESIGN.md §11).  The stock backends
+        truncate by slicing a *prefix* of the very same packed operands —
+        no layout change — so they return ``None``: one cache entry serves
+        every depth, and a draft dispatch can neither evict nor alias the
+        full-precision entry because it deliberately IS the same entry.
+        A backend that packs depth-specialized operands must return a
+        value that changes with the depth, so each depth gets its own
+        entry instead of serving another depth's layout."""
+        return None
+
     # -- run time ----------------------------------------------------------
     def matmul2d(self, x2d: jax.Array, ops: Dict[str, jax.Array],
                  param: dict, *, bm: int = 128,
-                 interpret: Optional[bool] = None) -> jax.Array:
-        """[M, K] @ packed -> [M, N] float32."""
+                 interpret: Optional[bool] = None,
+                 plane_depth=None) -> jax.Array:
+        """[M, K] @ packed -> [M, N] float32.
+
+        ``plane_depth`` (``None`` = full precision) asks for the truncated
+        top-k-planes draft product.  Only plane-CSC payloads can truncate;
+        backends without per-plane operands accept and ignore it — their
+        draft is the exact product, which is always a *correct* draft
+        (acceptance 1.0), just not a cheaper one."""
         raise NotImplementedError
 
     # -- plumbing ----------------------------------------------------------
@@ -249,6 +269,56 @@ def use_block(bm: Optional[int]):
         yield
     finally:
         _block_stack.pop()
+
+
+# ------------------------------------------------------- spec-depth default
+# scoped draft plane-depth override (self-speculative decode, DESIGN.md
+# §11); None = full precision, "plan" = per-layer compiler depth
+_spec_stack: list = [None]
+
+
+@contextlib.contextmanager
+def use_spec_depth(depth):
+    """Scoped draft plane-depth for every ``sme_apply`` underneath — the
+    self-speculative *draft* pass (DESIGN.md §11) runs its whole forward
+    inside ``with use_spec_depth(...)``.  Accepts an int (uniform depth),
+    the string ``"plan"`` (each layer uses its compiler-chosen
+    ``sme_draft_planes`` meta, full precision where absent), or ``None``
+    (no-op, so call sites thread an optional knob without branching)."""
+    if depth is None:
+        yield
+        return
+    _spec_stack.append(depth)
+    try:
+        yield
+    finally:
+        _spec_stack.pop()
+
+
+def resolve_spec_depth(param: Optional[dict] = None, plane_depth=None):
+    """Draft plane-depth for one dispatch: explicit arg > ``use_spec_depth``
+    context > ``None`` (full precision).  ``"plan"`` resolves to the
+    param's ``sme_draft_planes`` meta (written by the compiler per layer;
+    absent or non-positive means the planner saw no profitable truncation
+    for this layer, so it drafts at full precision).  Returns ``None``, a
+    python int, or a (possibly traced / stacked) integer array."""
+    depth = plane_depth if plane_depth is not None else _spec_stack[-1]
+    if depth is None:
+        return None
+    if isinstance(depth, str):
+        if depth != "plan":
+            raise ValueError(
+                f"plane_depth must be an int, 'plan', or None; got {depth!r}")
+        if param is None or "sme_draft_planes" not in param:
+            return None
+        depth = param["sme_draft_planes"]
+    if _is_concrete(depth):
+        arr = np.asarray(depth)
+        if arr.size == 0 or int(arr.max()) <= 0:
+            return None
+        if arr.ndim == 0:
+            return int(arr)
+    return depth
 
 
 def resolve_block_m(backend_name: Optional[str] = None,
@@ -462,6 +532,51 @@ def _obs_cache_miss(backend_name: str, anchor, block_key) -> None:
     _obs_cache_event(event)
 
 
+def _draft_plane_entries(last, nnz, depth) -> Optional[int]:
+    """Plane-list entries a depth-truncated draft actually streams: sum
+    over tile groups of ``min(group size, depth)``.  ``None`` when any
+    input is traced (nothing concrete to count)."""
+    if not (_is_concrete(last) and _is_concrete(nnz) and _is_concrete(depth)):
+        return None
+    la = np.asarray(last)
+    L = la.shape[-1]
+    la2 = la.reshape(-1, L)
+    d = max(int(np.asarray(depth).reshape(-1)[0]), 1)
+    valid = np.arange(L)[None, :] < np.asarray(nnz).reshape(-1, 1)
+    prev = np.concatenate([np.ones_like(la2[:, :1]), la2[:, :-1]], axis=1)
+    starts = (prev == 1) & valid
+    gidx = np.where(valid, np.cumsum(starts, axis=1) - 1, -1)
+    rows = np.broadcast_to(np.arange(la2.shape[0])[:, None], gidx.shape)
+    sizes = np.zeros((la2.shape[0], L), np.int64)
+    np.add.at(sizes, (rows[valid], gidx[valid]), 1)
+    return int(np.minimum(sizes, d).sum())
+
+
+def _obs_draft_dispatch(ops: Dict[str, jax.Array], plane_depth) -> None:
+    """Draft-dispatch decisions + modeled truncated HBM payload (the
+    perf claim of DESIGN.md §11, observable per process)."""
+    if not obs.enabled():
+        return
+    _obs_counter(
+        "sme_draft_dispatch_total",
+        "truncated-plane draft dispatch decisions (trace-time)",
+        ("backend",)).labels(backend="v3").inc()
+    kept = _draft_plane_entries(ops["last"], ops["nnz"], plane_depth)
+    if kept is None:
+        return
+    planes = ops["planes"]
+    per_entry = (int(np.prod(planes.shape[-2:]))
+                 * np.dtype(planes.dtype).itemsize)
+    side = sum(int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+               for op, v in ops.items() if op != "planes")
+    _obs_counter(
+        "sme_draft_modeled_bytes_total",
+        "modeled HBM bytes one truncated draft dispatch streams: kept "
+        "plane bitmaps (sum over tile groups of min(size, depth)) plus "
+        "the full side/index operands",
+        ("backend",)).labels(backend="v3").inc(kept * per_entry + side)
+
+
 def _obs_decode_kernel(used_decode: bool) -> None:
     if not obs.enabled():
         return
@@ -478,8 +593,10 @@ def _obs_decode_kernel(used_decode: bool) -> None:
 # weight identity -> packed operands; validated by weakref so a recycled
 # id() can never alias a dead weight, and evicted by the weakref callback
 # when the weight dies so operand arrays don't outlive their weight.  The
-# key carries the backend's pack_block_key(bm) so a block-size choice that
-# changes the packed layout/padding invalidates instead of aliasing.
+# key carries the backend's pack_block_key(bm) and pack_depth_key(depth)
+# so a block-size or draft-depth choice that changes the packed layout
+# invalidates instead of aliasing (the stock backends' depth key is None:
+# truncation is an operand *prefix*, so every depth shares one entry).
 _OPERAND_CACHE: Dict[tuple, Tuple[object, Dict[str, jax.Array]]] = {}
 
 
@@ -488,15 +605,16 @@ def clear_operand_cache() -> None:
 
 
 def _cached_operands(param: dict, backend: SMEBackend,
-                     bm: int = 128) -> Dict[str, jax.Array]:
+                     bm: int = 128, plane_depth=None) -> Dict[str, jax.Array]:
     anchor = param["sme_codes"]
     bkey = backend.pack_block_key(bm)
-    key = (backend.name, bkey, id(anchor))
+    dkey = backend.pack_depth_key(plane_depth)
+    key = (backend.name, bkey, dkey, id(anchor))
     hit = _OPERAND_CACHE.get(key)
     if hit is not None and hit[0]() is anchor:
         _obs_cache_event("hit")
         return hit[1]
-    _obs_cache_miss(backend.name, anchor, bkey)
+    _obs_cache_miss(backend.name, anchor, (bkey, dkey))
     ops = pack_param_operands(param, backend)
     try:
         ref = weakref.ref(anchor, lambda _, k=key: _OPERAND_CACHE.pop(k, None))
@@ -546,7 +664,9 @@ class SpmmV1Backend(SMEBackend):
     def pack_weight(self, smew, pad_to=None):
         return smew.pack_csc(pad_to=pad_to)
 
-    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None,
+                 plane_depth=None):
+        del plane_depth               # no per-plane payload: draft == exact
         if interpret is None:
             interpret = _default_interpret()
         n = _param_kn(param)[1]
@@ -621,7 +741,9 @@ class SpmmV2Backend(SMEBackend):
         return {"packed": packed, "rowscale": rowscale,
                 "rowid": rowid, "nnz": nnz}
 
-    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None,
+                 plane_depth=None):
+        del plane_depth               # no per-plane payload: draft == exact
         if interpret is None:
             interpret = _default_interpret()
         n = _param_kn(param)[1]
@@ -676,9 +798,8 @@ def _static_group_bound(last, nnz) -> Optional[int]:
     return max(int(((la == 1) & valid).sum(axis=-1).max()), 1)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "G", "interpret"))
-def _v3_decode_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
-                    scale, qscale, *, n, G, interpret):
+def _v3_decode_impl(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
+                    scale, qscale, plane_depth, *, n, G, interpret):
     from repro.kernels.sme_spmm.sme_spmm_planes_decode import \
         sme_spmm_planes_decode
     m, k = x2d.shape
@@ -694,9 +815,30 @@ def _v3_decode_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
         scale.reshape(-1).astype(jnp.float32) * qscale)
     y = sme_spmm_planes_decode(xp, planes, sign, rowscale,
                                colscale.reshape(nt, bn), rowid, shift,
-                               last, nnz, G=G, out_dtype=jnp.float32,
-                               interpret=interpret)
+                               last, nnz, G=G, plane_depth=plane_depth,
+                               out_dtype=jnp.float32, interpret=interpret)
     return y[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "G", "interpret"))
+def _v3_decode_call(x2d, planes, sign, rowscale, rowid, shift, last, nnz,
+                    scale, qscale, *, n, G, interpret):
+    return _v3_decode_impl(x2d, planes, sign, rowscale, rowid, shift, last,
+                           nnz, scale, qscale, None,
+                           n=n, G=G, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "G", "interpret"))
+def _v3_decode_draft_call(x2d, planes, sign, rowscale, rowid, shift, last,
+                          nnz, scale, qscale, plane_depth,
+                          *, n, G, interpret):
+    """Truncated-plane draft variant of :func:`_v3_decode_call`.  The
+    depth rides as a *traced* i32 scalar operand, so the per-layer depths
+    a compiler plan assigns share one compiled program per shape instead
+    of fragmenting the jit cache."""
+    return _v3_decode_impl(x2d, planes, sign, rowscale, rowid, shift, last,
+                           nnz, scale, qscale, plane_depth,
+                           n=n, G=G, interpret=interpret)
 
 
 @register_backend
@@ -714,18 +856,40 @@ class SpmmV3Backend(SMEBackend):
     def pack_weight(self, smew, pad_to=None):
         return smew.pack_plane_csc(pad_to=pad_to)
 
-    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None):
+    def matmul2d(self, x2d, ops, param, *, bm=128, interpret=None,
+                 plane_depth=None):
         if interpret is None:
             interpret = _default_interpret()
         n = _param_kn(param)[1]
         scale = param["sme_scale"].reshape(1, -1).astype(jnp.float32)
         nbits = jnp.asarray(param.get("sme_nbits", 8), jnp.float32)
         use_decode = _use_decode_kernel(x2d.shape[0], bm)
+        if plane_depth is not None and not use_decode:
+            # truncation lives in the tile-group decode kernel — the
+            # matmul grid steps through mid-group list slots and cannot
+            # skip them — so drafts force the decode path whenever the
+            # batch fits one M tile (SME_DECODE_KERNEL=off still wins)
+            use_decode = (x2d.shape[0] <= bm and
+                          os.environ.get("SME_DECODE_KERNEL", "auto").lower()
+                          not in ("off", "0", "never"))
+        if not use_decode:
+            # full-precision fallback is still a *correct* draft (exact
+            # product, acceptance 1.0) — just not a shortcut
+            plane_depth = None
         _obs_decode_kernel(use_decode)
         if use_decode:
             # GEMV-shaped batch: tile-group grid + double-buffered bitmap
             # DMA + fused epilogue (sme_spmm_planes_decode); bit-identical
             # to the matmul grid below
+            if plane_depth is not None:
+                _obs_draft_dispatch(ops, plane_depth)
+                return _v3_decode_draft_call(
+                    x2d, ops["planes"], ops["sign"], ops["rowscale"],
+                    ops["rowid"], ops["shift"], ops["last"], ops["nnz"],
+                    scale, jnp.exp2(-nbits),
+                    jnp.asarray(plane_depth, jnp.int32), n=n,
+                    G=_static_group_bound(ops["last"], ops["nnz"]),
+                    interpret=bool(interpret))
             return _v3_decode_call(
                 x2d, ops["planes"], ops["sign"], ops["rowscale"],
                 ops["rowid"], ops["shift"], ops["last"], ops["nnz"],
@@ -754,7 +918,8 @@ def _constrain_features(y: jax.Array) -> jax.Array:
 # smelint: trace-time
 def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
               *, out_dtype=None, bm: Optional[int] = None,
-              interpret: Optional[bool] = None) -> jax.Array:
+              interpret: Optional[bool] = None,
+              plane_depth=None) -> jax.Array:
     """y = x @ W_eff for an SME-packed param dict; x: [..., K] -> [..., N].
 
     The single entry point every model layer dispatches through.  Handles
@@ -767,8 +932,15 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
     ``bm`` (the kernels' M block size) defaults through
     :func:`resolve_block_m`: explicit arg > ``use_block`` context >
     autotune-cache best for this (backend, shape) > ``SME_BM`` env > 128.
+
+    ``plane_depth`` (default through :func:`resolve_spec_depth`: explicit
+    arg > ``use_spec_depth`` context > ``None``) asks for the truncated
+    top-k-planes *draft* product (DESIGN.md §11).  Only the plane-CSC v3
+    backend can truncate; everywhere else the draft is served at full
+    precision — exact, never wrong, just not a shortcut.
     """
     be = resolve_backend(param, backend)
+    pd = resolve_spec_depth(param, plane_depth) if be.name == "v3" else None
     if out_dtype is None:
         out_dtype = x.dtype
     lead = _param_lead(param)
@@ -784,9 +956,10 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
             _obs_cache_event("prepacked")
             ops = be.operands_from_param(param)
         elif _is_concrete(param["sme_codes"]):
-            ops = _cached_operands(param, be, bm)
+            ops = _cached_operands(param, be, bm, pd)
         else:
             be = get_backend("xla")   # traced raw codes: cannot pack here
+            pd = None
     _obs_dispatch(be.name, ops, param)
 
     if "sme_perm" in param and be.OPERANDS:
@@ -805,7 +978,8 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
 
     if not lead:
         x2d = x.reshape(-1, x.shape[-1])
-        y = be.matmul2d(x2d, ops, param, bm=bm, interpret=interpret)
+        y = be.matmul2d(x2d, ops, param, bm=bm, interpret=interpret,
+                        plane_depth=pd)
         return _constrain_features(
             y.reshape(*x.shape[:-1], n).astype(out_dtype))
 
@@ -826,8 +1000,11 @@ def sme_apply(x: jax.Array, param: dict, backend: Optional[str] = None,
                   for mk in _META_DEFAULTS if mk in param}
         param_i = {"sme_scale": param["sme_scale"][idx],
                    "sme_sign": param["sme_sign"][idx], **meta_i}
+        # a plan-resolved draft depth stacks with shape == lead, exactly
+        # like the meta arrays: slice it down to this expert's scalar
+        pd_i = (pd[idx] if getattr(pd, "ndim", 0) == len(lead) else pd)
         x2d = x[idx].reshape(-1, k)
         ys.append(be.matmul2d(x2d, ops_i, param_i, bm=bm,
-                              interpret=interpret))
+                              interpret=interpret, plane_depth=pd_i))
     y = jnp.stack(ys).reshape(lead + inner + (n,))
     return _constrain_features(y.astype(out_dtype))

@@ -112,7 +112,10 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
     and, when the plan marks it, the tile-densifying row reordering (at
     the plan's level: codeword tiles or bit-plane tiles) — this is the one
     code path shared by inline conversion and the offline ``.smez``
-    compiler (DESIGN.md §4).
+    compiler (DESIGN.md §4).  A plan layer with ``draft_planes > 0``
+    additionally travels as an ``sme_draft_planes`` i32 meta leaf (shape
+    == lead, like the other meta), which ``sme_apply`` resolves when a
+    speculative draft runs under ``use_spec_depth("plan")`` (§11).
     """
     predicate = predicate or _eligible
 
@@ -151,6 +154,11 @@ def convert_params_to_sme(params, n_bits=8, window=3, squeeze=1,
         # stacked layers, which slices every leaf along the leading axis
         stacked = {key: np.stack([p[key] for p in packed]).reshape(
             lead + packed[0][key].shape) for key in packed[0]}
+        if lp is not None and getattr(lp, "draft_planes", 0) > 0:
+            # the compiler-chosen speculative draft depth rides as meta
+            # (shape == lead so lax.scan slicing works like the rest)
+            stacked["sme_draft_planes"] = np.full(
+                lead, lp.draft_planes, np.int32)
         for name in _backend_names(layer_backend):
             from .backend import get_backend, pack_param_operands
             be = get_backend(name)

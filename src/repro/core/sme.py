@@ -75,6 +75,30 @@ class SMEWeight:
         mag = untile_codes(val, self.shape)
         return mag * self.sign_dense() * self.scale
 
+    def dequant_topk_planes(self, k: int) -> np.ndarray:
+        """Effective weight [K, N] (float64) with every tile truncated to
+        its ``k`` most significant *occupied* planes — the oracle for the
+        decode kernel's ``plane_depth`` draft truncation (DESIGN.md §11).
+
+        Plane-CSC tile groups are sorted by ascending plane index, i.e.
+        most-significant-first, so the kernel's per-group prefix of length
+        ``k`` splices exactly this plane set; ``k >=`` the deepest tile's
+        occupancy is bit-identical to :meth:`dequant`.  Mirrors the
+        kernel's clamp of non-positive depths to 1.
+        """
+        occp = self.plane_occupancy()                       # [Nq, nr, nc]
+        rank = np.cumsum(occp, axis=0) - occp     # occupied planes before q
+        keep = occp & (rank < max(int(k), 1))
+        val = np.zeros(self.tiled_codes.shape, dtype=np.float64)
+        for q in range(self.n_bits):
+            bit = (self.tiled_codes >> (self.n_bits - 1 - q)) & 1
+            val += bit * np.where(keep[q], 2.0 ** (self.n_bits - 1 - q),
+                                  0.0)[..., None, None]
+        val *= 2.0 ** -self.n_bits
+        val = val * (2.0 ** self.row_exp.astype(np.float64))[..., None]
+        mag = untile_codes(val, self.shape)
+        return mag * self.sign_dense() * self.scale
+
     def sign_dense(self) -> np.ndarray:
         """+-1 sign matrix [K, N] from the packed bits."""
         k, n = self.shape

@@ -65,7 +65,13 @@ def device_kind() -> str:
 
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
-    """One measured configuration: backend x shape x block size x device."""
+    """One measured configuration: backend x shape x block size x device.
+
+    ``plane_depth`` distinguishes truncated-plane draft dispatches
+    (DESIGN.md §11) from full-precision ones — a depth-k call DMAs fewer
+    plane bitmaps, so its timing must never be confused with the exact
+    kernel's.  0 means full precision; old cache files (no ``pd=``
+    field) decode to 0, so CACHE_VERSION stays unchanged."""
 
     backend: str
     m: int
@@ -73,17 +79,22 @@ class TuneKey:
     n: int
     bm: int
     device: str
+    plane_depth: int = 0
 
     def encode(self) -> str:
-        return (f"{self.backend}|m={self.m}|k={self.k}|n={self.n}"
-                f"|bm={self.bm}|dev={self.device}")
+        s = (f"{self.backend}|m={self.m}|k={self.k}|n={self.n}"
+             f"|bm={self.bm}|dev={self.device}")
+        if self.plane_depth:
+            s += f"|pd={self.plane_depth}"
+        return s
 
     @staticmethod
     def decode(s: str) -> "TuneKey":
         parts = s.split("|")
         kv = dict(p.split("=", 1) for p in parts[1:])
         return TuneKey(backend=parts[0], m=int(kv["m"]), k=int(kv["k"]),
-                       n=int(kv["n"]), bm=int(kv["bm"]), device=kv["dev"])
+                       n=int(kv["n"]), bm=int(kv["bm"]), device=kv["dev"],
+                       plane_depth=int(kv.get("pd", 0)))
 
 
 class AutotuneCache:
@@ -142,16 +153,19 @@ class AutotuneCache:
         return self.entries.get(key.encode())
 
     def best(self, backend: str, m: int, k: int, n: int,
-             device: Optional[str] = None
+             device: Optional[str] = None, plane_depth: int = 0
              ) -> Optional[Tuple[int, Dict[str, float]]]:
         """Best-measured ``(bm, entry)`` for a (backend, shape) on this
-        device, by max tokens/s; ``None`` when nothing was measured."""
+        device, by max tokens/s; ``None`` when nothing was measured.
+        Full-precision lookups (``plane_depth=0``, the default) never see
+        truncated-draft timings and vice versa."""
         device = device or device_kind()
         hits = []
         for s, e in self.entries.items():
             key = TuneKey.decode(s)
-            if (key.backend, key.m, key.k, key.n, key.device) == \
-                    (backend, m, k, n, device):
+            if (key.backend, key.m, key.k, key.n, key.device,
+                    key.plane_depth) == \
+                    (backend, m, k, n, device, plane_depth):
                 hits.append((key.bm, e))
         if not hits:
             _obs_event("miss")

@@ -32,6 +32,18 @@ planes of one (row, col) tile are spliced inside a single grid step:
 Accumulation order over tiles and planes matches ``sme_spmm_planes`` —
 groups walk the same (col, row, plane)-sorted CSC list — so the output
 is bit-identical to v3 and therefore to v1/v2 (DESIGN.md §8).
+
+**Truncated-plane drafts** (``plane_depth``, DESIGN.md §11).  The plane
+list of one tile group is sorted by ascending plane index ``q``, and the
+splice value of plane ``q`` is ``2^(Nq-1-q)`` — so a group's entries run
+most-significant-first and a *prefix* of the group is exactly the top-k
+most significant occupied planes of that tile.  Clamping ``g_count`` to
+``plane_depth`` therefore dispatches the same kernel over a truncated
+operand view — fewer splice iterations, fewer HBM bitmap DMAs, no
+repack — computing the top-``plane_depth``-planes dequant of every tile
+(the self-speculative *draft* pass).  ``plane_depth`` may be a traced
+scalar: the clamp is a host-level ``jnp.minimum`` on the group index,
+outside the Pallas grid.
 """
 from __future__ import annotations
 
@@ -154,6 +166,7 @@ def sme_spmm_planes_decode(
     nnz: jax.Array,          # i32 [Nt]
     *,
     G: int | None = None,
+    plane_depth=None,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
@@ -164,6 +177,12 @@ def sme_spmm_planes_decode(
     ``G`` is the static tile-group grid bound (max groups per column);
     defaults to ``L``, always safe — a tighter bound from concrete
     operands just trims padded grid steps.
+
+    ``plane_depth`` (``None`` = full precision; int or traced i32 scalar)
+    truncates every tile group to its first ``plane_depth`` entries — the
+    top-k most significant occupied planes, since groups are sorted
+    MSB-first (module docstring).  Any value >= the deepest group is an
+    exact no-op (bit-identical to ``plane_depth=None``).
     """
     nt, L, bk8, bn = planes.shape
     bk = bk8 * 8
@@ -174,6 +193,12 @@ def sme_spmm_planes_decode(
         raise ValueError(f"K_pad={k_pad} not a multiple of bk={bk}")
     G = L if G is None else max(min(int(G), L), 1)
     g_rowid, g_start, g_count, g_nnz = plane_group_index(rowid, last, nnz, G)
+    if plane_depth is not None:
+        # the truncated draft: each group splices only its plane_depth
+        # most significant occupied planes (a prefix of the same list —
+        # identical operands, fewer DMA'd bitmaps)
+        g_count = jnp.minimum(
+            g_count, jnp.maximum(jnp.asarray(plane_depth, jnp.int32), 1))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(nt, G),

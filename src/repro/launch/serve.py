@@ -14,6 +14,12 @@ and slot caches across a device mesh (bit-identical tokens to the default
 (translated into ``--xla_force_host_platform_device_count`` before the
 first jax import).
 
+``--spec-depth K|auto`` turns on self-speculative decoding (DESIGN.md
+§11): greedy draft tokens from only the K most-significant occupied
+bit-planes per tile group, verified at full precision — accepted tokens
+are bit-identical to the non-speculative run.  ``auto`` reads the
+per-layer depths the compiler plan stamped into the converted params.
+
 Telemetry (DESIGN.md §9): ``--metrics-out m.json`` writes the process
 metrics snapshot on exit (TTFT/inter-token histograms, decode-step and
 dispatch counters — ``python -m repro.obs.gate m.json`` is the CI gate),
@@ -84,6 +90,21 @@ def main():
                          "operands offline and serve through the Pallas "
                          "block-sparse kernels (interpret mode off-TPU); "
                          "v3 is the plane-CSC format (DESIGN.md §2)")
+    ap.add_argument("--spec-depth",
+                    default=os.environ.get("SME_SPEC_DEPTH") or None,
+                    metavar="K|auto",
+                    help="enable self-speculative decode (DESIGN.md §11): "
+                         "draft greedy tokens over only the K most-"
+                         "significant occupied bit-planes per tile group, "
+                         "then verify at full precision; 'auto' uses the "
+                         "per-layer depths the compiler plan stamped into "
+                         "the params.  Accepted tokens are bit-identical "
+                         "to non-speculative greedy decode.  Default from "
+                         "SME_SPEC_DEPTH; unset = off")
+    ap.add_argument("--spec-len", type=int,
+                    default=int(os.environ.get("SME_SPEC_LEN") or 0),
+                    help="tokens drafted per speculative round (default 4 "
+                         "when --spec-depth is set; SME_SPEC_LEN env)")
     ap.add_argument("--bm", type=int, default=None,
                     help="kernel M block size override (threads through "
                          "core.backend.use_block; default resolves via the "
@@ -112,6 +133,16 @@ def main():
                          "port at /metrics for the process lifetime "
                          "(0 picks an ephemeral port)")
     args = ap.parse_args()
+
+    spec_depth = args.spec_depth
+    if spec_depth is not None and spec_depth != "auto":
+        if not str(spec_depth).isdigit() or int(spec_depth) < 1:
+            ap.error(f"--spec-depth must be a positive int or 'auto', "
+                     f"got {spec_depth!r}")
+        spec_depth = int(spec_depth)
+    spec_kw = {}
+    if spec_depth is not None:
+        spec_kw = dict(spec_depth=spec_depth, spec_len=args.spec_len)
 
     if args.metrics_port is not None:
         from repro.obs.httpd import start_metrics_server
@@ -150,7 +181,7 @@ def main():
         t0 = time.time()
         eng = ServeEngine.from_artifact(api, args.artifact, mesh=mesh,
                                         slots=args.slots, s_max=args.s_max,
-                                        **kw)
+                                        **spec_kw, **kw)
         print(f"booted from {args.artifact} in {time.time() - t0:.2f}s "
               f"(plan: {len(eng.plan.layers) if eng.plan else 0} layers, "
               f"backend={eng.backend})")
@@ -167,14 +198,20 @@ def main():
                 # auto on TPU serves through the Pallas kernels, which need
                 # operands emitted offline (jitted programs cannot pack)
                 emit = "v2" if args.squeeze >= 1 else "v1"
+            plan = None
+            if spec_depth == "auto" and emit == "v3":
+                # --spec-depth auto needs the per-layer draft depths the
+                # compiler stamps into the params (sme_draft_planes meta)
+                from repro.compiler.plan import plan_model
+                plan = plan_model(params_np, backend=emit)
             params = convert_params_to_sme(params_np, squeeze=args.squeeze,
-                                           backend=emit)
+                                           backend=emit, plan=plan)
             print("SME storage:", sme_storage_summary(params))
             print(f"SME backend: {args.backend}")
         eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
                           backend=args.backend if args.sme else None,
                           mesh=mesh, bm=args.bm,
-                          trace_capacity=args.trace_capacity)
+                          trace_capacity=args.trace_capacity, **spec_kw)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

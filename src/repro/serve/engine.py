@@ -64,6 +64,9 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     temperature: float = 0.0
+    #: per-request opt-out of self-speculative decode (DESIGN.md §11);
+    #: only greedy (temperature == 0) rows ever speculate either way
+    spec: bool = True
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -82,7 +85,8 @@ def _prompt_bucket(n: int, s_max: int) -> int:
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
                  seed: int = 0, backend: Optional[str] = None, mesh=None,
-                 bm: Optional[int] = None, trace_capacity: int = 4096):
+                 bm: Optional[int] = None, trace_capacity: int = 4096,
+                 spec_len: int = 0, spec_depth=None):
         """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
         | "auto") for packed weights: every jitted prefill/decode call runs
         under ``core.backend.use_backend``, so serving goes through the
@@ -92,6 +96,17 @@ class ServeEngine:
         ``bm`` overrides the kernels' M block size the same way (traced
         under ``core.backend.use_block``); None defers to the autotune
         cache / ``SME_BM`` env / 128 default (DESIGN.md §8).
+
+        ``spec_depth`` enables self-speculative decode (DESIGN.md §11):
+        an int runs the draft pass with that uniform truncated plane
+        depth, ``"auto"``/``"plan"`` uses each layer's compiler-chosen
+        ``sme_draft_planes`` depth, ``None`` (default) disables
+        speculation entirely.  ``spec_len`` is the number of tokens
+        drafted per round (defaults to 4 once a depth is set).  Accepted
+        tokens are bit-identical to non-speculative greedy decode by
+        construction — every emitted token comes from a full-precision
+        decode step over fully verified context; the draft only decides
+        how many verify steps a round runs.
 
         ``mesh`` is a jax Mesh with ("data", "model") axes; None builds the
         degenerate 1x1 mesh — there is no unsharded code path.
@@ -183,6 +198,38 @@ class ServeEngine:
             out_shardings=(self._rep, self.cache_sh),
             donate_argnums=(2,))
 
+        # -- self-speculative decode (DESIGN.md §11) --------------------
+        if spec_depth == "auto":
+            spec_depth = "plan"
+        if spec_depth is not None and not isinstance(spec_depth, str):
+            spec_depth = int(spec_depth)
+            if spec_depth < 1:
+                raise ValueError(f"spec_depth must be >= 1, got {spec_depth}")
+        self.spec_depth = spec_depth
+        self.spec_len = int(spec_len)
+        if spec_depth is not None and self.spec_len <= 0:
+            self.spec_len = 4
+        d = self.spec_len
+
+        def draft_fn(p, token, caches, pos, active):
+            # d greedy truncated-precision steps on a throwaway cache
+            # view: the cache argument is NOT donated, so the engine
+            # cache is untouched and draft KV writes die with the scan
+            def one(carry, _):
+                tok, c, ps = carry
+                logits, c = api.decode_step(p, tok, c, ps, active)
+                l = logits if logits.ndim == 2 else logits[:, -1]
+                nxt = jnp.argmax(l, axis=-1).astype(jnp.int32)[:, None]
+                return (nxt, c, ps + 1), nxt[:, 0]
+            _, toks = jax.lax.scan(one, (token, caches, pos), None, length=d)
+            return toks                                        # [d, B]
+
+        self._draft = jax.jit(
+            draft_fn,
+            in_shardings=(self.param_sh, self._rep, self.cache_sh,
+                          self._rep, self._rep),
+            out_shardings=self._rep)
+
         def write_fn(full, pre, row, slot):
             def one(f, p, bd):
                 src = jax.lax.dynamic_slice_in_dim(p, row, 1, axis=bd)
@@ -249,6 +296,33 @@ class ServeEngine:
             "pad_frac": R.histogram(
                 "serve_prefill_pad_fraction",
                 "padding fraction of each batched prefill call",
+                ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+            # -- self-speculative decode (DESIGN.md §11) ----------------
+            "spec_rounds": R.counter(
+                "serve_spec_rounds_total",
+                "speculative draft/verify rounds",
+                ("engine",)).labels(**eid),
+            "spec_draft_tokens": R.counter(
+                "serve_spec_draft_tokens_total",
+                "tokens proposed by truncated-plane draft passes",
+                ("engine",)).labels(**eid),
+            "spec_accepted": R.counter(
+                "serve_spec_accepted_total",
+                "draft tokens confirmed by full-precision verify",
+                ("engine",)).labels(**eid),
+            "spec_rolled_back": R.counter(
+                "serve_spec_rolled_back_total",
+                "draft tokens discarded after verify — host bookkeeping "
+                "only: unverified tokens never reach the KV cache, so "
+                "there is no device state to rewind",
+                ("engine",)).labels(**eid),
+            "spec_verify_steps": R.counter(
+                "serve_spec_verify_steps_total",
+                "full-precision verify decode steps inside spec rounds",
+                ("engine",)).labels(**eid),
+            "spec_accept_frac": R.histogram(
+                "serve_spec_acceptance",
+                "accepted / drafted fraction per spec row-round",
                 ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
         }
         self.tracer = obs.Tracer(capacity=trace_capacity)
@@ -467,7 +541,16 @@ class ServeEngine:
         the per-slot position vector and ``active`` masks free slots, whose
         cache regions are structurally never written by the model.  The
         program samples in-graph and returns ``[B]`` token ids; the cache
-        argument is donated (no per-step double-buffer)."""
+        argument is donated (no per-step double-buffer).
+
+        With speculation configured (``spec_depth``) and at least one
+        eligible row, the step runs a draft/verify round instead
+        (:meth:`_spec_round`) — with no eligible rows the plain path below
+        runs byte-identically to a spec-less engine."""
+        if self.spec_depth is not None:
+            rows = self._spec_rows()
+            if rows.any():
+                return self._spec_round(rows)
         act = np.array([r is not None for r in self.active])
         if not act.any():
             return
@@ -518,6 +601,110 @@ class ServeEngine:
         if tr:
             self.tracer.span("decode_step", t_step,
                              active=int(act.sum()), slots=self.slots)
+
+    # ------------------------------------------------- speculative decode
+    def _spec_rows(self) -> np.ndarray:
+        """Rows eligible to draft this round: active, opted in, greedy
+        (temperature 0 — stochastic rows cannot be verified by argmax),
+        at least 2 tokens still wanted (a 1-token round gains nothing over
+        a plain step), and enough cache ring left for full acceptance."""
+        ok = np.zeros(self.slots, bool)
+        for i, r in enumerate(self.active):
+            if r is None or not r.spec or r.temperature != 0.0:
+                continue
+            if r.max_new_tokens - len(r.out_tokens) < 2:
+                continue
+            if self.pos[i] + self.spec_len >= self.s_max:
+                continue
+            ok[i] = True
+        return ok
+
+    def _spec_round(self, spec_rows: np.ndarray):
+        """One draft/verify round (DESIGN.md §11).
+
+        Draft: ``spec_len`` greedy decode steps at truncated plane depth
+        (``use_spec_depth``) on a throwaway cache view.  Verify: a short
+        loop of the same jitted full-precision ragged decode the plain
+        path uses.  Every emitted token comes from a full-precision step
+        whose entire context is already verified — the draft tokens are
+        never emitted, they only decide whether a row *continues* to the
+        next verify step (its draft matched, so the draft's next input
+        was right).  Hence accepted output is bit-identical to
+        sequential greedy decode, and a mismatch needs no device
+        rollback: the mismatching row just stops participating, and the
+        correction token's KV is written by the next round's first step.
+        Non-spec active rows ride along in verify step 0 only — one
+        ordinary token per round, same numerics as the plain path."""
+        from repro.core.backend import use_spec_depth
+        act = np.array([r is not None for r in self.active])
+        d = self.spec_len
+        tr = obs.enabled()
+        t_step = self.tracer.now() if tr else 0.0
+        with self._scope(), use_spec_depth(self.spec_depth):
+            dtoks = np.asarray(self._draft(
+                self.params, jnp.asarray(self.last_token), self.caches,
+                jnp.asarray(self.pos), jnp.asarray(spec_rows)))
+        self._m["spec_rounds"].inc()
+        self._m["spec_draft_tokens"].inc(d * int(spec_rows.sum()))
+        temps = np.array([r.temperature if r is not None else 0.0
+                          for r in self.active], np.float32)
+        alive = act.copy()
+        accepted = np.zeros(self.slots, np.int64)
+        for v in range(d + 1):
+            self.key, sub = jax.random.split(self.key)
+            with self._scope():
+                toks, self.caches = self._decode(
+                    self.params, jnp.asarray(self.last_token), self.caches,
+                    jnp.asarray(self.pos), jnp.asarray(alive),
+                    jnp.asarray(temps), sub)
+            self._m["decode_steps"].inc()
+            self._m["spec_verify_steps"].inc()
+            toks = np.asarray(toks)
+            t_tok = self.tracer.now() if tr else 0.0
+            for i in np.flatnonzero(alive):
+                req = self.active[i]
+                tok = int(toks[i])
+                req.out_tokens.append(tok)
+                self._m["tokens"].inc()
+                if tr:
+                    self._m["itl"].observe(t_tok - self._last_tok_t[i])
+                    self._last_tok_t[i] = t_tok
+                    self.tracer.event("token", rid=req.rid, slot=int(i),
+                                      pos=int(self.pos[i]))
+                self.pos[i] += 1
+                self.last_token[i, 0] = tok
+                matched = bool(spec_rows[i]) and v < d \
+                    and tok == int(dtoks[v, i])
+                if matched:
+                    accepted[i] += 1
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens or \
+                        self.pos[i] >= self.s_max:
+                    req.done = True
+                    self._outcome("completed")
+                    self.tracer.event("finish", rid=req.rid,
+                                      n_tokens=len(req.out_tokens))
+                    self._t_enq.pop(id(req), None)
+                    self.active[i] = None
+                    self.pos[i] = 0       # park freed row in-bounds
+                    alive[i] = False
+                elif not matched:
+                    # non-spec rows take exactly one step per round; a
+                    # mismatched spec row already emitted its correction
+                    # token above — nothing to rewind
+                    alive[i] = False
+            if not alive.any():
+                break
+        for i in np.flatnonzero(spec_rows):
+            self._m["spec_accepted"].inc(int(accepted[i]))
+            self._m["spec_rolled_back"].inc(d - int(accepted[i]))
+            if tr:
+                self._m["spec_accept_frac"].observe(accepted[i] / d)
+        if tr:
+            self.tracer.span("spec_round", t_step,
+                             active=int(act.sum()), slots=self.slots,
+                             drafted=d * int(spec_rows.sum()),
+                             accepted=int(accepted.sum()))
 
     def _sample(self, logits, temperatures) -> np.ndarray:
         """Host-side batched sampling: greedy where ``temperatures[i] ==

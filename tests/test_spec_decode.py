@@ -1,0 +1,385 @@
+"""Self-speculative decoding over truncated bit-planes (DESIGN.md §11).
+
+Layers under test, bottom-up: the truncated plane-CSC splice against the
+top-k-planes dequant oracle (plus the bitwise full-precision anchor), the
+``use_spec_depth`` dispatch plumbing through ``sme_apply``, operand-cache
+keying (draft dispatches must never evict or alias full-precision
+entries), the autotune ``TuneKey`` depth field, the compiler's per-layer
+depth selection and its plan/meta round-trips, and finally the serving
+contract: spec-on decode — solo, ragged, and mixed spec-on/spec-off —
+emits tokens bit-identical to non-speculative greedy decode across arch
+families and kernel backends.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backend as B
+from repro.core.integrate import pack_sme_param
+from repro.core.sme import sme_compress
+
+RNG = jax.random.key(0)
+
+
+def _pruned(rng, k, n, frac=0.9):
+    w = rng.normal(0, 0.05, (k, n))
+    w[np.abs(w) < np.quantile(np.abs(w), frac)] = 0.0
+    return w
+
+
+# ------------------------------------------------------------ kernel layer
+def test_truncated_splice_matches_topk_oracle():
+    """Depth-k dispatch == x @ dequant_topk_planes(k) to f32 roundoff, for
+    every k; depth >= the deepest group is bitwise the full product."""
+    rng = np.random.default_rng(0)
+    w = _pruned(rng, 256, 256)
+    param = {k: jnp.asarray(v) for k, v in
+             pack_sme_param(w, squeeze=1, squeeze_max=7,
+                            backend="v3").items()}
+    smew = B.smeweight_from_param(param)
+    x = jnp.asarray(rng.normal(0, 1, (1, 256)), jnp.float32)
+    full = np.asarray(B.sme_apply(x, param, "v3"))
+    max_depth = int(smew.plane_occupancy().sum(axis=0).max())
+    for k in range(1, max_depth + 1):
+        y = np.asarray(B.sme_apply(x, param, "v3", plane_depth=k))
+        oracle = np.asarray(x, np.float64) @ smew.dequant_topk_planes(k)
+        scale = max(float(np.abs(oracle).max()), 1e-9)
+        assert np.abs(y - oracle).max() / scale < 1e-5, f"depth {k}"
+    # the draft path with a saturating depth IS the exact kernel
+    np.testing.assert_array_equal(
+        np.asarray(B.sme_apply(x, param, "v3", plane_depth=max_depth)),
+        full)
+    np.testing.assert_array_equal(
+        np.asarray(B.sme_apply(x, param, "v3", plane_depth=max_depth + 3)),
+        full)
+
+
+def test_truncation_is_monotone_in_depth():
+    """Deeper drafts only add splice mass: the depth-k product error vs
+    full precision must be non-increasing in k."""
+    rng = np.random.default_rng(1)
+    w = _pruned(rng, 256, 256)
+    param = {k: jnp.asarray(v) for k, v in
+             pack_sme_param(w, squeeze=1, backend="v3").items()}
+    smew = B.smeweight_from_param(param)
+    x = jnp.asarray(rng.normal(0, 1, (1, 256)), jnp.float32)
+    full = np.asarray(B.sme_apply(x, param, "v3"), np.float64)
+    max_depth = int(smew.plane_occupancy().sum(axis=0).max())
+    errs = [float(np.abs(np.asarray(
+        B.sme_apply(x, param, "v3", plane_depth=k),
+        np.float64) - full).max()) for k in range(1, max_depth + 1)]
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 1e-4 * max(float(np.abs(full).max()), 1e-9)
+
+
+# ------------------------------------------------- dispatch / context layer
+def test_use_spec_depth_context_dispatch():
+    """sme_apply under use_spec_depth(k) == explicit plane_depth=k; 'plan'
+    reads the param's sme_draft_planes meta; None and missing meta are
+    full precision."""
+    rng = np.random.default_rng(2)
+    w = _pruned(rng, 256, 256)
+    param = {k: jnp.asarray(v) for k, v in
+             pack_sme_param(w, squeeze=1, backend="v3").items()}
+    x = jnp.asarray(rng.normal(0, 1, (1, 256)), jnp.float32)
+    full = np.asarray(B.sme_apply(x, param, "v3"))
+    explicit = np.asarray(B.sme_apply(x, param, "v3", plane_depth=2))
+    assert not np.array_equal(explicit, full), \
+        "depth-2 draft should differ from full precision on this layer"
+    with B.use_spec_depth(2):
+        ctx = np.asarray(B.sme_apply(x, param, "v3"))
+    np.testing.assert_array_equal(ctx, explicit)
+    with B.use_spec_depth("plan"):
+        # no meta -> full precision
+        np.testing.assert_array_equal(
+            np.asarray(B.sme_apply(x, param, "v3")), full)
+        pm = dict(param, sme_draft_planes=jnp.asarray(2, jnp.int32))
+        np.testing.assert_array_equal(
+            np.asarray(B.sme_apply(x, pm, "v3")), explicit)
+    # context closed: back to full precision
+    np.testing.assert_array_equal(
+        np.asarray(B.sme_apply(x, param, "v3")), full)
+
+
+def test_resolve_spec_depth_rules():
+    assert B.resolve_spec_depth(None, None) is None
+    assert B.resolve_spec_depth({}, 3) == 3
+    assert B.resolve_spec_depth({"sme_draft_planes": np.int32(4)},
+                                "plan") == 4
+    assert B.resolve_spec_depth({}, "plan") is None
+    assert B.resolve_spec_depth(
+        {"sme_draft_planes": np.zeros((), np.int32)}, "plan") is None
+    with pytest.raises(ValueError, match="plan"):
+        B.resolve_spec_depth({}, "bogus")
+    with B.use_spec_depth(5):
+        assert B.resolve_spec_depth({}) == 5
+        assert B.resolve_spec_depth({}, 2) == 2     # explicit arg wins
+    assert B.resolve_spec_depth({}) is None
+
+
+def test_non_plane_backends_ignore_depth():
+    """v1/v2/xla have no per-plane payload: a draft dispatch returns the
+    exact product (always-correct draft), not an error."""
+    rng = np.random.default_rng(3)
+    w = _pruned(rng, 256, 256)
+    x = jnp.asarray(rng.normal(0, 1, (1, 256)), jnp.float32)
+    for name in ("xla", "v1", "v2"):
+        param = {k: jnp.asarray(v) for k, v in
+                 pack_sme_param(w, squeeze=1,
+                                backend=None if name == "xla"
+                                else name).items()}
+        full = np.asarray(B.sme_apply(x, param, name))
+        draft = np.asarray(B.sme_apply(x, param, name, plane_depth=1))
+        np.testing.assert_array_equal(draft, full)
+
+
+# ------------------------------------------------------ operand-cache layer
+def test_operand_cache_depth_keying():
+    """Stock v3: depth is an operand prefix, so every depth shares ONE
+    cache entry (same object — draft can't evict the full entry because
+    it IS it).  A backend whose pack_depth_key varies gets per-depth
+    entries under distinct keys."""
+    rng = np.random.default_rng(4)
+    w = _pruned(rng, 256, 256)
+    param = {k: jnp.asarray(v) for k, v in
+             pack_sme_param(w, squeeze=1, backend="v3").items()}
+    v3 = B.get_backend("v3")
+    B.clear_operand_cache()
+    try:
+        ops_full = B._cached_operands(param, v3, plane_depth=None)
+        ops_draft = B._cached_operands(param, v3, plane_depth=2)
+        assert ops_draft is ops_full
+        assert len(B._OPERAND_CACHE) == 1
+
+        class DepthPacked(type(v3)):
+            name = "v3"
+
+            def pack_depth_key(self, plane_depth):
+                return None if plane_depth is None else int(plane_depth)
+
+        dp = DepthPacked()
+        B.clear_operand_cache()
+        a = B._cached_operands(param, dp, plane_depth=None)
+        bops = B._cached_operands(param, dp, plane_depth=2)
+        c = B._cached_operands(param, dp, plane_depth=None)
+        assert bops is not a
+        assert c is a                       # full entry survived the draft
+        assert len(B._OPERAND_CACHE) == 2
+    finally:
+        B.clear_operand_cache()
+
+
+# ------------------------------------------------------------ autotune layer
+def test_tunekey_plane_depth_roundtrip():
+    from repro.hardware.autotune import AutotuneCache, TuneKey
+    k = TuneKey("v3", 1, 256, 256, 128, "cpu-interpret", plane_depth=3)
+    assert TuneKey.decode(k.encode()) == k
+    # pre-depth cache strings (no pd= field) decode to full precision
+    old = "v3|m=1|k=256|n=256|bm=128|dev=cpu-interpret"
+    assert TuneKey.decode(old).plane_depth == 0
+    assert TuneKey.decode(old) == TuneKey("v3", 1, 256, 256, 128,
+                                          "cpu-interpret")
+    cache = AutotuneCache()
+    cache.record(TuneKey("v3", 1, 256, 256, 128, "dev"), 10.0)
+    cache.record(TuneKey("v3", 1, 256, 256, 128, "dev", plane_depth=2), 4.0)
+    # full-precision lookups never see the (faster) truncated timing
+    assert cache.best("v3", 1, 256, 256, "dev")[1]["us_per_call"] == 10.0
+    assert cache.best("v3", 1, 256, 256, "dev",
+                      plane_depth=2)[1]["us_per_call"] == 4.0
+    assert cache.best("v3", 1, 256, 256, "dev", plane_depth=5) is None
+
+
+# ------------------------------------------------------------ compiler layer
+def test_draft_depth_from_occupancy():
+    from repro.compiler.plan import draft_depth_from_occupancy
+    rng = np.random.default_rng(5)
+    smew = sme_compress(_pruned(rng, 512, 512), squeeze=1, squeeze_max=7)
+    k = draft_depth_from_occupancy(smew)
+    sizes = smew.plane_occupancy().sum(axis=0)
+    assert 1 <= k < int(sizes.max()), \
+        "pruned layer must get a strictly-truncating depth"
+    # the chosen depth strictly reduces the streamed entry count
+    assert int(np.minimum(sizes, k).sum()) < int(sizes.sum())
+    # an unattainable coverage bar means no useful depth
+    assert draft_depth_from_occupancy(smew, coverage=1.0) == 0
+
+
+def test_plan_carries_draft_planes():
+    from repro.compiler.plan import PLAN_VERSION, CompilePlan, plan_model
+    rng = np.random.default_rng(6)
+    tree = {"layer": {"w": _pruned(rng, 256, 256)}}
+    plan = plan_model(tree, backend="v3")
+    lp = plan.layers["layer/w"]
+    assert lp.backend == "v3" and lp.draft_planes >= 1
+    back = CompilePlan.from_json(plan.to_json())
+    assert back.layers["layer/w"].draft_planes == lp.draft_planes
+    assert back.version == PLAN_VERSION
+    # pre-v4 plan JSON (no draft_planes) defaults to full precision
+    import json
+    doc = json.loads(plan.to_json())
+    for v in doc["layers"].values():
+        v.pop("draft_planes")
+    doc["version"] = 3
+    assert CompilePlan.from_json(
+        json.dumps(doc)).layers["layer/w"].draft_planes == 0
+
+
+def test_convert_stamps_draft_meta():
+    from repro.compiler.plan import plan_model
+    from repro.core.integrate import convert_params_to_sme
+    rng = np.random.default_rng(7)
+    tree = {"layer": {"w": _pruned(rng, 256, 256)}}
+    plan = plan_model(tree, backend="v3")
+    out = convert_params_to_sme(tree, plan=plan, backend="v3")
+    meta = out["layer"]["w"].get("sme_draft_planes")
+    assert meta is not None and meta.dtype == np.int32
+    assert int(np.asarray(meta).max()) == \
+        plan.layers["layer/w"].draft_planes
+    # without a plan there is no meta: 'plan' depth falls back to exact
+    out2 = convert_params_to_sme(tree, backend="v3")
+    assert "sme_draft_planes" not in out2["layer"]["w"]
+
+
+# ------------------------------------------------------------- serving layer
+from repro.configs import ARCHS, scale_down          # noqa: E402
+from repro.models import build_model                 # noqa: E402
+from repro.serve import Request, ServeEngine         # noqa: E402
+
+SPEC_CASES = [
+    ("mixtral-8x7b", "v1"),          # GQA ring + MoE
+    ("mixtral-8x7b", "v3"),
+    ("deepseek-v2-lite-16b", "v3"),  # MLA + MoE
+    ("jamba-v0.1-52b", "v1"),        # SSM hybrid
+    ("jamba-v0.1-52b", "v3"),
+]
+
+
+def _build(arch, backend):
+    over = dict(d_model=128, d_ff=256 if ARCHS[arch].d_ff else 0,
+                vocab=256)
+    if ARCHS[arch].n_experts:
+        over["expert_dff"] = 128
+    cfg = scale_down(ARCHS[arch], **over)
+    api = build_model(cfg)
+    params = api.init_params(RNG)
+    from repro.core.integrate import convert_params_to_sme
+    params = convert_params_to_sme(jax.tree.map(np.asarray, params),
+                                   squeeze=1, backend=backend)
+    return cfg, api, params
+
+
+def _reqs(cfg, spec_flags=(True, True, True), seed=0):
+    rng = np.random.default_rng(seed)
+    lens = (5, 7, 6)
+    max_new = (4, 6, 3)
+    out = []
+    for i in range(len(spec_flags)):
+        r = Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=lens[i],
+                                        dtype=np.int32),
+                    max_new_tokens=max_new[i])
+        r.spec = spec_flags[i]
+        out.append(r)
+    return out
+
+
+@pytest.mark.parametrize("arch,backend", SPEC_CASES,
+                         ids=[f"{a}-{b}" for a, b in SPEC_CASES])
+def test_spec_ragged_bit_identical(arch, backend):
+    """The §11 contract across arch families x kernel backends: a ragged
+    spec-on batch (one row opted out mid-mix) emits exactly the tokens of
+    the non-speculative run on the same batch — which
+    tests/test_serve_ragged.py already pins to solo greedy decode."""
+    cfg, api, params = _build(arch, backend)
+    base = _reqs(cfg)
+    eng0 = ServeEngine(api, params, slots=2, s_max=32, backend=backend)
+    eng0.run(base, max_steps=100)
+    assert all(r.done for r in base)
+    ragged = _reqs(cfg, spec_flags=(True, False, True))
+    eng = ServeEngine(api, params, slots=2, s_max=32, backend=backend,
+                      spec_depth=2, spec_len=3)
+    eng.run(ragged, max_steps=100)
+    assert all(r.done for r in ragged)
+    for rid, (got, want) in enumerate(zip(ragged, base)):
+        assert got.out_tokens == want.out_tokens, (
+            f"speculative decode diverged for request {rid}: "
+            f"spec={got.out_tokens} greedy={want.out_tokens}")
+
+
+_PROP_STATE: dict = {}
+
+
+def _prop_case():
+    """One shared smoke model + its greedy baseline tokens for the
+    property/metric tests (built once, lazily — module import stays
+    cheap)."""
+    if not _PROP_STATE:
+        cfg, api, params = _build("qwen1.5-0.5b", "v3")
+        base = _reqs(cfg)
+        eng0 = ServeEngine(api, params, slots=2, s_max=32, backend="v3")
+        eng0.run(base, max_steps=100)
+        _PROP_STATE["case"] = (cfg, api, params,
+                               [r.out_tokens for r in base])
+    return _PROP_STATE["case"]
+
+
+def test_spec_mixed_batches_bit_identical_property():
+    """Hypothesis property: any mix of spec-on/spec-off rows, draft depth
+    and draft length is bit-identical to the spec-less engine on the same
+    ragged batch."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=5, deadline=None)
+    @given(flags=st.tuples(st.booleans(), st.booleans(), st.booleans()),
+           depth=st.sampled_from([1, 3, "plan"]),
+           spec_len=st.integers(min_value=1, max_value=4))
+    def prop(flags, depth, spec_len):
+        cfg, api, params, base = _prop_case()
+        mixed = _reqs(cfg, spec_flags=flags)
+        eng = ServeEngine(api, params, slots=2, s_max=32, backend="v3",
+                          spec_depth=depth, spec_len=spec_len)
+        eng.run(mixed, max_steps=100)
+        assert [r.out_tokens for r in mixed] == base
+
+    prop()
+
+
+def test_spec_skips_sampled_rows():
+    """temperature > 0 rows never enter a draft round (greedy-argmax
+    verification cannot match a stochastic sample), and a spec engine
+    still serves them."""
+    cfg, api, params, _ = _prop_case()
+    reqs = _reqs(cfg)
+    for r in reqs:
+        r.temperature = 2.0
+    eng = ServeEngine(api, params, slots=3, s_max=32, backend="v3",
+                      spec_depth=2, spec_len=3)
+    eng.run(reqs, max_steps=100)
+    assert all(r.done for r in reqs)
+    assert eng._m["spec_rounds"].value == 0
+    assert eng._m["spec_draft_tokens"].value == 0
+
+
+def test_spec_metrics_account_for_drafts():
+    """drafted == accepted + rolled_back, and the spec engine reports
+    verify steps inside rounds."""
+    cfg, api, params, _ = _prop_case()
+    reqs = _reqs(cfg)
+    eng = ServeEngine(api, params, slots=3, s_max=32, backend="v3",
+                      spec_depth=2, spec_len=3)
+    eng.run(reqs, max_steps=100)
+    drafted = eng._m["spec_draft_tokens"].value
+    assert drafted > 0
+    assert drafted == (eng._m["spec_accepted"].value
+                       + eng._m["spec_rolled_back"].value)
+    assert eng._m["spec_verify_steps"].value > 0
+    assert eng._m["spec_rounds"].value > 0
+
+
+def test_spec_depth_validation():
+    cfg, api, params, _ = _prop_case()
+    with pytest.raises(ValueError, match="spec_depth"):
+        ServeEngine(api, params, slots=1, s_max=16, backend="v3",
+                    spec_depth=0)
