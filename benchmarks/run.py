@@ -39,10 +39,10 @@ def _jsonable(v):
 
 def main() -> None:
     from benchmarks import (paper_tables, kernel_bench, roofline,
-                            spec_decode_bench)
+                            spec_decode_bench, serve_bench)
 
     suites = paper_tables.ALL + kernel_bench.ALL + roofline.ALL \
-        + spec_decode_bench.ALL
+        + spec_decode_bench.ALL + serve_bench.ALL
     only = [a for a in sys.argv[1:] if not a.startswith("-")]
     if only:
         # substring filter on function names: `run.py shard_matrix` runs

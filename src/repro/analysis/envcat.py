@@ -82,6 +82,27 @@ CATALOG: Dict[str, EnvVar] = dict([
         ("repro.launch.serve",),
         "Default for launch/serve --spec-len: tokens drafted per "
         "speculative round; only consulted when speculation is on."),
+    _entry(
+        "SME_CHUNK_LEN", "32", "positive int",
+        ("repro.serve.engine",),
+        "Chunked-prefill quota: at most this many prompt tokens are "
+        "scored per engine step per slot, interleaved with running "
+        "decode rows (DESIGN.md §12); clamped to s_max, and ignored "
+        "for enc-dec / frontend configs which keep one-shot prefill."),
+    _entry(
+        "SME_PAGE_TOKENS", "16", "positive int",
+        ("repro.serve.engine",),
+        "KV page size in tokens for slot-page occupancy accounting and "
+        "the prefix-cache pool; snapshot boundaries must be multiples "
+        "of it, so chunk_len % page_tokens == 0 when the prefix cache "
+        "is on."),
+    _entry(
+        "SME_PREFIX_CACHE", "0", "1/on/true/yes enable; anything else off",
+        ("repro.serve.engine",),
+        "Process default for ServeEngine(prefix_cache=...): snapshot "
+        "chunk-aligned prompt prefixes into a refcounted paged pool and "
+        "restore them for later prompts that match token-id-exactly "
+        "(DESIGN.md §12).  Restored rows emit bit-identical tokens."),
 ])
 
 

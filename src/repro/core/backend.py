@@ -778,7 +778,15 @@ def _use_decode_kernel(m: int, bm: int) -> bool:
     ``off``/``0`` never, ``on``/``1`` whenever the whole batch fits one M
     tile, ``auto`` (default) when M is at most half a tile — i.e. the
     matmul grid would waste most of its padded M rows.  Read at trace
-    time, like backend resolution."""
+    time, like backend resolution.
+
+    Chunked serving (DESIGN.md §12) does not change this rule: the
+    engine's chunk program is a scan whose every step is one
+    ``decode_step`` over the full slot batch, so each dispatch still
+    sees ``M == slots`` regardless of how many prompt/verify positions
+    a step scores — mixed chunk sizes never push M past the decode
+    threshold, and the ``sme_decode_kernel_total`` (mode, path) label
+    set stays as-is."""
     mode = os.environ.get("SME_DECODE_KERNEL", "auto").lower()
     if mode in ("off", "0", "never"):
         return False

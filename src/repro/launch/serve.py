@@ -14,6 +14,13 @@ and slot caches across a device mesh (bit-identical tokens to the default
 (translated into ``--xla_force_host_platform_device_count`` before the
 first jax import).
 
+The engine is an open-stream continuous scheduler (DESIGN.md §12):
+prompts prefill in ``--chunk-len`` token chunks interleaved with running
+decode rows, ``--prefix-cache`` reuses page-aligned token-id-exact
+prompt prefixes, and ``--stream`` drives the ``submit``/``poll``
+streaming API instead of the closed ``run()`` loop — all with tokens
+bit-identical to solo decoding.
+
 ``--spec-depth K|auto`` turns on self-speculative decoding (DESIGN.md
 §11): greedy draft tokens from only the K most-significant occupied
 bit-planes per tile group, verified at full precision — accepted tokens
@@ -105,6 +112,23 @@ def main():
                     default=int(os.environ.get("SME_SPEC_LEN") or 0),
                     help="tokens drafted per speculative round (default 4 "
                          "when --spec-depth is set; SME_SPEC_LEN env)")
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="chunked-prefill quota: prompt tokens scored per "
+                         "engine step per slot, interleaved with running "
+                         "decode rows (DESIGN.md §12; default SME_CHUNK_LEN "
+                         "env or 32)")
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="KV page size in tokens for occupancy accounting "
+                         "and the prefix-cache pool (default SME_PAGE_TOKENS "
+                         "env or 16)")
+    ap.add_argument("--prefix-cache", action="store_true", default=None,
+                    help="snapshot chunk-aligned prompt prefixes and "
+                         "restore them for token-id-exact matches "
+                         "(DESIGN.md §12; default SME_PREFIX_CACHE env)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the open-stream API instead of run(): "
+                         "submit() requests over time, pump()+step() the "
+                         "scheduler, and poll() streamed token events")
     ap.add_argument("--bm", type=int, default=None,
                     help="kernel M block size override (threads through "
                          "core.backend.use_block; default resolves via the "
@@ -156,6 +180,14 @@ def main():
     cfg = scaled_config(args)
     api = build_model(cfg)
 
+    serve_kw = {}
+    if args.chunk_len is not None:
+        serve_kw["chunk_len"] = args.chunk_len
+    if args.page_tokens is not None:
+        serve_kw["page_tokens"] = args.page_tokens
+    if args.prefix_cache:
+        serve_kw["prefix_cache"] = True
+
     if args.artifact:
         from repro.compiler import read_manifest
         man = read_manifest(args.artifact)
@@ -181,7 +213,7 @@ def main():
         t0 = time.time()
         eng = ServeEngine.from_artifact(api, args.artifact, mesh=mesh,
                                         slots=args.slots, s_max=args.s_max,
-                                        **spec_kw, **kw)
+                                        **spec_kw, **serve_kw, **kw)
         print(f"booted from {args.artifact} in {time.time() - t0:.2f}s "
               f"(plan: {len(eng.plan.layers) if eng.plan else 0} layers, "
               f"backend={eng.backend})")
@@ -211,7 +243,8 @@ def main():
         eng = ServeEngine(api, params, slots=args.slots, s_max=args.s_max,
                           backend=args.backend if args.sme else None,
                           mesh=mesh, bm=args.bm,
-                          trace_capacity=args.trace_capacity, **spec_kw)
+                          trace_capacity=args.trace_capacity,
+                          **spec_kw, **serve_kw)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -220,8 +253,31 @@ def main():
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()
-    stats = eng.run(reqs, max_steps=500)
-    print(f"stats: {stats}")
+    if args.stream:
+        # open-stream demo: requests arrive two at a time between engine
+        # steps; poll() drains token/finish/reject events as they happen
+        pending = list(reqs)
+        n_events = 0
+        for steps in range(500):
+            for r in pending[:2]:
+                eng.submit(r)
+            pending = pending[2:]
+            eng.pump()
+            eng.step()
+            for ev in eng.poll():
+                n_events += 1
+                if ev["kind"] != "token":
+                    print(f"  [{steps:3d}] req {ev['rid']}: {ev['kind']}")
+            if not pending and all(r.done or r.outcome for r in reqs):
+                break
+        done = sum(1 for r in reqs if r.outcome == "completed")
+        toks = sum(len(r.out_tokens) for r in reqs)
+        print(f"stream: {done}/{len(reqs)} completed, {toks} tokens, "
+              f"{n_events} events in {steps + 1} steps")
+        stats = {"tokens": toks}
+    else:
+        stats = eng.run(reqs, max_steps=500)
+        print(f"stats: {stats}")
     for r in reqs[:4]:
         print(f"req {r.rid}: prompt={list(r.prompt)} -> {r.out_tokens}")
     print(f"throughput: {stats['tokens'] / (time.time() - t0):.1f} tok/s "

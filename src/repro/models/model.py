@@ -14,6 +14,11 @@ dry-run, trainer and serving engine are architecture-agnostic:
     vector (a scalar broadcasts) and ``active`` a ``[B]`` bool mask —
     inactive rows never write their cache region, so one jitted call
     serves a ragged continuous batch (DESIGN.md §6)
+  * ``decode_chunk(params, tokens, caches, pos, nvalid, active=None,
+    gated=None)`` -> (logits [K, B, V], live [K, B], caches); scores
+    ``k >= 1`` positions per row in one call (chunked prefill, batched
+    speculative verify — DESIGN.md §12), built uniformly from
+    ``decode_step`` by :func:`make_decode_chunk`
   * ``input_specs(shape_cfg)``              ShapeDtypeStruct stand-ins
 """
 from __future__ import annotations
@@ -30,7 +35,60 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from . import encdec as ed
 from . import transformer as tf
 
-__all__ = ["ModelAPI", "build_model", "param_count", "active_param_count"]
+__all__ = ["ModelAPI", "build_model", "make_decode_chunk", "param_count",
+           "active_param_count"]
+
+
+def make_decode_chunk(decode_step: Callable) -> Callable:
+    """Generalize a single-token ``decode_step`` to score ``k >= 1``
+    positions per row in one call (DESIGN.md §12).
+
+    ``tokens`` is ``[B, K]`` int32; row ``i`` consumes its first
+    ``nvalid[i]`` tokens as consecutive decode steps starting at
+    ``pos[i]`` and is an *inactive* row (no cache writes — the §6
+    contract) for every later scan step.  ``gated`` rows additionally
+    stop as soon as a step's greedy argmax differs from the next input
+    token — the speculative-verify continuation rule: the next draft
+    token may only be scored if the full-precision step just confirmed
+    it would have been emitted.  Returns per-step logits ``[K, B, V]``,
+    the per-step liveness mask ``[K, B]`` (``live[s, i]`` == "step s
+    executed for row i"), and the updated caches.
+
+    Each scan iteration is exactly one ``decode_step`` over ``[B, 1]``
+    tokens, so every per-row value is bit-identical to the sequential
+    loop of single steps it replaces, and independent of the padded
+    scan length ``K`` (dead rows are inactive rows).
+    """
+    def decode_chunk(params, tokens, caches, pos, nvalid, active=None,
+                     gated=None):
+        b, k = tokens.shape
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        nvalid = jnp.broadcast_to(jnp.asarray(nvalid, jnp.int32), (b,))
+        act = jnp.ones((b,), bool) if active is None \
+            else jnp.asarray(active, bool)
+        gat = jnp.zeros((b,), bool) if gated is None \
+            else jnp.asarray(gated, bool)
+        toks = tokens.astype(jnp.int32).T                        # [K, B]
+        nxt = jnp.roll(toks, -1, axis=0)   # step s's gate token; last unused
+
+        def one(carry, xs):
+            i, tok, nxt_tok = xs
+            live, c, ps = carry
+            # park dead rows at 0 so their (unwritten) positions stay
+            # in-bounds by construction, like the engine's freed slots
+            logits, c = decode_step(params, tok[:, None], c,
+                                    jnp.where(live, ps, 0), live)
+            l = logits if logits.ndim == 2 else logits[:, -1]
+            greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
+            cont = live & (i + 1 < nvalid) & (~gat | (greedy == nxt_tok))
+            return (cont, c, jnp.where(live, ps + 1, ps)), (l, live)
+
+        init = (act & (nvalid > 0), caches, pos)
+        (_, caches, _), (logits, live) = jax.lax.scan(
+            one, init, (jnp.arange(k), toks, nxt))
+        return logits, live, caches
+
+    return decode_chunk
 
 
 @dataclasses.dataclass
@@ -42,6 +100,11 @@ class ModelAPI:
     decode_step: Callable
     init_cache: Callable
     input_specs: Callable
+    decode_chunk: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.decode_chunk is None:
+            self.decode_chunk = make_decode_chunk(self.decode_step)
 
     def abstract_params(self):
         return jax.eval_shape(self.init_params, jax.random.key(0))

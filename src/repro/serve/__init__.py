@@ -1,1 +1,2 @@
-from .engine import ServeEngine, Request
+from .engine import ServeEngine, Request, PromptTooLong
+from .paged import PageAllocator, PrefixEntry, PrefixIndex, SnapshotPlan

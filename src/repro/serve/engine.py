@@ -1,4 +1,5 @@
-"""Batched serving engine: mesh-native slot-based continuous batching.
+"""Batched serving engine: mesh-native continuous batching over an open
+request stream.
 
 Real-system behaviors covered at small scale:
 
@@ -19,21 +20,42 @@ Real-system behaviors covered at small scale:
   prefill call (per-row ``plen`` keeps it bit-identical per request);
   prompt lengths are bucketed to powers of two so admission windows reuse
   compiled programs;
-* **ragged decode in one call**: every engine step is exactly one jitted
-  decode regardless of how ragged the slots' positions are (DESIGN.md §6).
-  Sampling (per-row temperature, greedy iff 0) runs *inside* the decode
-  program, so each step transfers ``[B]`` token ids to host, not
-  ``[B, V]`` logits; the decode program donates the cache argument, so
-  per-step KV updates never double-buffer the cache;
-* per-request temperature sampling, per-request max_new_tokens and eos.
+* **open-stream continuous scheduling** (DESIGN.md §12): requests enter
+  through :meth:`ServeEngine.submit` and a bounded queue; :meth:`pump`
+  forms admission windows whenever slots free up, and prompts longer
+  than ``chunk_len`` are *chunk-prefilled* — their first ``chunk_len``
+  tokens go through the one-shot prefill program, the rest are scored
+  ``chunk_len`` positions per engine step **inside the same jitted call
+  that decodes the running rows**, so a long prompt never stalls decode;
+* **every engine step is exactly one jitted call** however mixed the
+  batch is: each row brings a per-step quota (1 for decode, up to
+  ``chunk_len`` for prefill, ``spec_len + 1`` for speculative verify) and
+  the ``decode_chunk`` scan masks rows past their quota as inactive —
+  the §6 contract, so per-row results are independent of the padded scan
+  length.  Sampling (per-row temperature, greedy iff 0) runs *inside*
+  the program, so each step transfers ``[K, B]`` token ids to host, not
+  logits; the program donates the cache argument (no per-step
+  double-buffer);
+* **prefix caching** (opt-in, ``SME_PREFIX_CACHE``): at every
+  ``chunk_len`` prefill boundary the slot's cache row is snapshotted
+  into a refcounted page pool (``serve/paged.py`` does the accounting;
+  page size ``SME_PAGE_TOKENS``), and a later request sharing that exact
+  token prefix restores the snapshot instead of recomputing it.  Reuse
+  is gated by full token-id comparison, and because the chunk schedule
+  over a shared prefix is deterministic, restored state is bit-identical
+  to recomputation (DESIGN.md §12);
+* per-request temperature sampling, per-request max_new_tokens and eos,
+  per-token streaming callbacks (``Request.on_token`` / :meth:`poll`).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import itertools
+import os
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +91,13 @@ class Request:
     spec: bool = True
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: streaming hook: called as ``on_token(req, tok)`` on every emitted
+    #: token (including the first), from the engine's host loop
+    on_token: Optional[Callable] = None
+    #: terminal outcome, set exactly when the matching
+    #: ``serve_requests_total`` counter is incremented:
+    #: "completed" | "evicted" | "rejected" | "unserved"
+    outcome: Optional[str] = None
 
 
 def _prompt_bucket(n: int, s_max: int) -> int:
@@ -86,7 +115,12 @@ class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, s_max: int = 128,
                  seed: int = 0, backend: Optional[str] = None, mesh=None,
                  bm: Optional[int] = None, trace_capacity: int = 4096,
-                 spec_len: int = 0, spec_depth=None):
+                 spec_len: int = 0, spec_depth=None,
+                 chunk_len: Optional[int] = None,
+                 page_tokens: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None,
+                 prefix_pages: Optional[int] = None,
+                 prefix_entries: int = 8):
         """``backend`` picks the SME execution backend ("xla" | "v1" | "v2"
         | "auto") for packed weights: every jitted prefill/decode call runs
         under ``core.backend.use_backend``, so serving goes through the
@@ -106,7 +140,19 @@ class ServeEngine:
         tokens are bit-identical to non-speculative greedy decode by
         construction — every emitted token comes from a full-precision
         decode step over fully verified context; the draft only decides
-        how many verify steps a round runs.
+        how many verify steps a round runs.  Verify scores all
+        ``spec_len + 1`` positions in ONE chunked call (DESIGN.md §12).
+
+        ``chunk_len`` bounds how many prompt tokens a prefilling row
+        scores per engine step (``SME_CHUNK_LEN`` env, default 32): a
+        prompt longer than this one-shot budget keeps its slot and is
+        chunk-prefilled inside the regular decode steps, interleaved
+        with running decode rows.  ``page_tokens`` is the prefix-cache
+        page size (``SME_PAGE_TOKENS``, default 16) and ``prefix_cache``
+        (``SME_PREFIX_CACHE``, default off) enables snapshot/reuse of
+        shared prompt prefixes at chunk boundaries, with
+        ``prefix_pages`` pool pages (default ``4 * s_max/page_tokens``)
+        and ``prefix_entries`` snapshot slots.
 
         ``mesh`` is a jax Mesh with ("data", "model") axes; None builds the
         degenerate 1x1 mesh — there is no unsharded code path.
@@ -163,6 +209,38 @@ class ServeEngine:
         # (its cross-attention over padded frames is not length-masked)
         self._ragged_prefill = not self.cfg.n_enc_layers
 
+        # -- continuous scheduler (DESIGN.md §12) -----------------------
+        if chunk_len is None:
+            chunk_len = int(os.environ.get("SME_CHUNK_LEN", "32"))
+        if page_tokens is None:
+            page_tokens = int(os.environ.get("SME_PAGE_TOKENS", "16"))
+        if prefix_cache is None:
+            prefix_cache = os.environ.get(
+                "SME_PREFIX_CACHE", "0").lower() in ("1", "on", "true",
+                                                     "yes")
+        chunk_len, page_tokens = int(chunk_len), int(page_tokens)
+        if chunk_len < 1:
+            raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+        if page_tokens < 1:
+            raise ValueError(f"page_tokens must be >= 1, got {page_tokens}")
+        self.chunk_len = chunk_len
+        self.page_tokens = page_tokens
+        # chunked prefill re-scores the prompt tail through the decode
+        # contract, so it needs the ragged decoder-only family without a
+        # frontend (frontend tokens only exist in the one-shot program)
+        self._chunk_prefill = self._ragged_prefill and not self.cfg.frontend
+        #: per-admission one-shot prefill budget; whole prompt otherwise
+        self._c = min(chunk_len, s_max) if self._chunk_prefill else s_max
+        #: per-slot count of prompt tokens already scored (a slot is
+        #: *prefilling* while this is < len(prompt): no output yet)
+        self._pf_next = np.zeros(slots, np.int32)
+        self._queue: collections.deque = collections.deque()
+        #: bounded stream of {"kind": "token"|"finish"|...} events for
+        #: :meth:`poll` consumers (newest win once full)
+        self.events: collections.deque = collections.deque(maxlen=4096)
+        self._max_pages = max(s_max // page_tokens, 1)
+        self._prefix = None
+
         # prefill outputs replicate: the window cache is transient (one
         # slot write later it is gone) and the logits feed host sampling;
         # pinning them replicated keeps the slot-write program's input
@@ -181,21 +259,32 @@ class ServeEngine:
                 prefill_fn, in_shardings=(self.param_sh, self._rep),
                 out_shardings=(self._rep, self._rep))
 
-        def decode_fn(p, token, caches, pos, active, temps, key):
-            logits, newc = api.decode_step(p, token, caches, pos, active)
-            l = logits if logits.ndim == 2 else logits[:, -1]
-            greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
-            drawn = jax.random.categorical(
-                key, l.astype(jnp.float32)
-                / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
-            toks = jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
-            return toks, newc
+        # one jitted scoring program for every step shape: each row
+        # consumes its first nvalid[i] of the K fed tokens as consecutive
+        # decode steps (K = 1 is the plain ragged decode).  Sampling per
+        # scan step runs in-graph; gated rows stop at the first greedy
+        # mismatch (speculative verify).  Retraces once per distinct K.
+        def chunk_fn(p, tokens, caches, pos, nvalid, gated, active, temps,
+                     key):
+            logits, live, newc = api.decode_chunk(
+                p, tokens, caches, pos, nvalid, active, gated)
+            keys = jax.random.split(key, tokens.shape[1])
 
-        self._decode = jax.jit(
-            decode_fn,
+            def samp(l, kk):
+                greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
+                drawn = jax.random.categorical(
+                    kk, l.astype(jnp.float32)
+                    / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
+                return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+            return jax.vmap(samp)(logits, keys), live, newc
+
+        self._chunk = jax.jit(
+            chunk_fn,
             in_shardings=(self.param_sh, self._rep, self.cache_sh,
-                          self._rep, self._rep, self._rep, self._rep),
-            out_shardings=(self._rep, self.cache_sh),
+                          self._rep, self._rep, self._rep, self._rep,
+                          self._rep, self._rep),
+            out_shardings=(self._rep, self._rep, self.cache_sh),
             donate_argnums=(2,))
 
         # -- self-speculative decode (DESIGN.md §11) --------------------
@@ -297,6 +386,27 @@ class ServeEngine:
                 "serve_prefill_pad_fraction",
                 "padding fraction of each batched prefill call",
                 ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+            # -- continuous scheduler (DESIGN.md §12) -------------------
+            "preemptions": R.counter(
+                "serve_preemptions_total",
+                "prefilling rows bumped back to the queue",
+                ("engine",)).labels(**eid),
+            "prefix_hits": R.counter(
+                "serve_prefix_hits_total",
+                "admissions served from a prefix-cache snapshot",
+                ("engine",)).labels(**eid),
+            "prefix_misses": R.counter(
+                "serve_prefix_misses_total",
+                "admissions with no reusable prefix snapshot",
+                ("engine",)).labels(**eid),
+            "prefix_snapshots": R.counter(
+                "serve_prefix_snapshots_total",
+                "prefix snapshots taken at chunk boundaries",
+                ("engine",)).labels(**eid),
+            "prefix_evictions": R.counter(
+                "serve_prefix_evictions_total",
+                "prefix entries evicted (LRU) to free pages or slots",
+                ("engine",)).labels(**eid),
             # -- self-speculative decode (DESIGN.md §11) ----------------
             "spec_rounds": R.counter(
                 "serve_spec_rounds_total",
@@ -318,16 +428,44 @@ class ServeEngine:
                 ("engine",)).labels(**eid),
             "spec_verify_steps": R.counter(
                 "serve_spec_verify_steps_total",
-                "full-precision verify decode steps inside spec rounds",
+                "full-precision verify positions scored inside spec "
+                "rounds (scan steps with a live gated row)",
                 ("engine",)).labels(**eid),
             "spec_accept_frac": R.histogram(
                 "serve_spec_acceptance",
                 "accepted / drafted fraction per spec row-round",
                 ("engine",), buckets=_FRACTION_BUCKETS).labels(**eid),
+            "spec_verify_s": R.histogram(
+                "serve_spec_verify_seconds",
+                "wall-clock of the one-call batched verify (the chunked "
+                "scoring call of a step with spec rows)",
+                ("engine",)).labels(**eid),
         }
+        self._g_queue = R.gauge(
+            "serve_queue_depth", "requests waiting for admission",
+            ("engine",)).labels(**eid)
+        self._g_pages = R.gauge(
+            "serve_slot_pages_in_use",
+            "page-granular cache working set across active slots",
+            ("engine",)).labels(**eid)
+        self._g_pool = R.gauge(
+            "serve_prefix_pool_pages_in_use",
+            "prefix-cache pool pages currently referenced",
+            ("engine",)).labels(**eid)
+        self._g_entries = R.gauge(
+            "serve_prefix_entries", "live prefix-cache snapshots",
+            ("engine",)).labels(**eid)
         self.tracer = obs.Tracer(capacity=trace_capacity)
         self._t_enq: Dict[int, float] = {}     # id(req) -> enqueue ts
         self._last_tok_t = np.zeros(slots)     # last token ts per slot
+
+        if prefix_cache and self._chunk_prefill:
+            if self._c % page_tokens:
+                raise ValueError(
+                    f"prefix caching needs the chunk boundary ({self._c}) "
+                    f"to be a multiple of page_tokens ({page_tokens}) so "
+                    f"snapshots are page-aligned")
+            self._init_prefix(prefix_pages, int(prefix_entries))
 
     @classmethod
     def from_artifact(cls, api, path, *, verify: bool = False, mesh=None,
@@ -396,7 +534,12 @@ class ServeEngine:
                 for k in ("prefills", "prefill_reqs", "decode_steps",
                           "tokens")}
 
-    def _outcome(self, outcome: str) -> None:
+    def _outcome(self, req: Request, outcome: str) -> None:
+        """Terminal outcome: stamped on the request AND counted in the
+        registry in the same breath, so per-run splits stay derivable
+        under continuous admission (requests from other submitters can
+        reach their outcomes between one ``run()``'s steps)."""
+        req.outcome = outcome
         self._m_requests.labels(engine=self._eid, outcome=outcome).inc()
 
     def _outcome_count(self, outcome: str) -> int:
@@ -410,10 +553,48 @@ class ServeEngine:
                               prompt_len=len(req.prompt))
 
     def _reject(self, req: Request) -> None:
-        self._outcome("rejected")
+        self._outcome(req, "rejected")
         self.tracer.event("reject", rid=req.rid,
                           prompt_len=len(req.prompt))
+        self.events.append({"kind": "reject", "rid": req.rid})
         self._t_enq.pop(id(req), None)
+
+    def _emit(self, req: Request, slot: int, tok: int, t_tok: float,
+              first: bool = False) -> None:
+        """One emitted token from the step loop: output list, counters
+        (the request's *first* token observes ttft instead of the
+        tokens/itl pair, keeping ``itl.count == tokens`` — §9), streaming
+        callback and event, trace event."""
+        req.out_tokens.append(tok)
+        if not first:
+            self._m["tokens"].inc()
+        if req.on_token is not None:
+            req.on_token(req, tok)
+        self.events.append({"kind": "token", "rid": req.rid, "token": tok})
+        if obs.enabled():
+            if first:
+                tq = self._t_enq.get(id(req))
+                if tq is not None:
+                    self._m["ttft"].observe(t_tok - tq)
+            else:
+                self._m["itl"].observe(t_tok - self._last_tok_t[slot])
+            self._last_tok_t[slot] = t_tok
+            self.tracer.event("token", rid=req.rid, slot=int(slot),
+                              pos=int(self.pos[slot]))
+
+    def _finish(self, req: Request, slot: int) -> None:
+        req.done = True
+        self._outcome(req, "completed")
+        self.tracer.event("finish", rid=req.rid,
+                          n_tokens=len(req.out_tokens))
+        self.events.append({"kind": "finish", "rid": req.rid,
+                            "outcome": "completed"})
+        self._t_enq.pop(id(req), None)
+        self.active[slot] = None
+        # park the freed row at 0 so inactive rows are in-bounds by
+        # construction, not by JAX's OOB scatter-drop semantics
+        self.pos[slot] = 0
+        self._pf_next[slot] = 0
 
     # ---------------------------------------------------------------- slots
     def _free_slot(self) -> Optional[int]:
@@ -424,6 +605,12 @@ class ServeEngine:
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
+
+    def _prefilling(self, i: int) -> bool:
+        """True while slot ``i``'s request still has unscored prompt
+        tokens (it holds a slot but has emitted nothing)."""
+        r = self.active[i]
+        return r is not None and int(self._pf_next[i]) < len(r.prompt)
 
     def _prefill_len(self, req: Request) -> int:
         """Validated prefill length (prompt + frontend tokens); raises
@@ -457,26 +644,107 @@ class ServeEngine:
         self._admit([req])
         return True
 
+    # ---------------------------------------------------- streaming API
+    def submit(self, req: Request) -> Request:
+        """Enqueue on the open stream — no admission here; :meth:`pump`
+        forms admission windows as slots free up.  Attach
+        ``req.on_token`` or drain :meth:`poll` for streaming output."""
+        self._mark_enqueue(req)
+        self._queue.append(req)
+        self._g_queue.set(len(self._queue))
+        return req
+
+    def pump(self) -> int:
+        """Admit every fittable queued request the free slots allow — one
+        batched prefill (or prefix restore) per drain window.  Unfittable
+        prompts at the queue head are rejected, the rest keep flowing.
+        Returns the number of requests admitted."""
+        admitted = 0
+        while self._queue:
+            free = len(self._free_slots())
+            cap = free if self._ragged_prefill else min(1, free)
+            window = []
+            while self._queue and len(window) < cap:
+                req = self._queue[0]
+                try:
+                    self._prefill_len(req)
+                except PromptTooLong:
+                    self._queue.popleft()
+                    self._reject(req)
+                    continue
+                window.append(self._queue.popleft())
+            if not window:
+                break
+            self._admit(window)
+            admitted += len(window)
+        self._g_queue.set(len(self._queue))
+        return admitted
+
+    def poll(self) -> List[Dict]:
+        """Drain and return the pending stream events (token / finish /
+        reject / preempt dicts, oldest first)."""
+        out = list(self.events)
+        self.events.clear()
+        return out
+
+    def preempt(self, slot: int) -> bool:
+        """Bump a still-prefilling row back to the queue head, freeing its
+        slot.  Only rows with no emitted tokens are preemptible — their
+        re-prefill is deterministic, so the request's eventual output is
+        unchanged (bit-identity survives preemption).  Returns False for
+        free, decoding, or already-emitting slots."""
+        req = self.active[slot]
+        if req is None or not self._prefilling(slot) or req.out_tokens:
+            return False
+        self.active[slot] = None
+        self.pos[slot] = 0
+        self._pf_next[slot] = 0
+        self._queue.appendleft(req)
+        self._m["preemptions"].inc()
+        self._g_queue.set(len(self._queue))
+        self.tracer.event("preempt", rid=req.rid, slot=int(slot))
+        self.events.append({"kind": "preempt", "rid": req.rid})
+        return True
+
+    # ------------------------------------------------------------ admission
     def _admit(self, reqs: List[Request]) -> None:
-        """One padded prefill call for a whole admission window.
+        """One admission window: prefix-cache hits restore their snapshot
+        into a free slot; the rest share a single padded prefill call
+        over each prompt's one-shot budget (``min(len, chunk_len)``).
 
         Prompts are right-padded to a shared bucketed length; the per-row
         ``plen`` vector keeps each row bit-identical to an unpadded
-        prefill of that request alone (DESIGN.md §7).  Requests whose
-        prefill-sampled token already satisfies eos/max_new_tokens
-        complete without taking a slot.  Callers must have validated
-        lengths (``_prefill_len``) and free-slot counts."""
+        prefill of that request alone (DESIGN.md §7).  Fully-fed requests
+        sample their first token here (and may complete without taking a
+        slot); longer prompts keep their slot in the *prefilling* state
+        and are chunk-scored by :meth:`step`.  Callers must have
+        validated lengths (``_prefill_len``) and free-slot counts."""
         assert reqs and len(reqs) <= len(self._free_slots())
+        if self._prefix is not None:
+            cold = []
+            for r in reqs:
+                ent = self._prefix_lookup(r)
+                if ent is not None:
+                    self._restore_entry(r, ent)
+                else:
+                    cold.append(r)
+            reqs = cold
+            if not reqs:
+                return
         plens = np.array([self._prefill_len(r) for r in reqs], np.int32)
         tok_lens = [len(r.prompt) for r in reqs]
+        feed = [min(tl, self._c) for tl in tok_lens]
+        # clamp the scored prefix to the one-shot budget: the prompt tail
+        # past it is chunk-scored through the decode contract (§12)
+        plens = np.minimum(plens, np.int32(self._c))
         b = len(reqs)
         if self._ragged_prefill:
-            pad_to = _prompt_bucket(max(tok_lens), self.s_max)
+            pad_to = _prompt_bucket(max(feed), self.s_max)
         else:
-            pad_to = max(tok_lens)          # enc-dec: one request per window
+            pad_to = max(feed)          # enc-dec: one request per window
         toks = np.zeros((b, pad_to), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, :tok_lens[i]] = r.prompt
+            toks[i, :feed[i]] = r.prompt[:feed[i]]
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.frontend == "vision_stub":
             batch["patches"] = jnp.zeros(
@@ -502,7 +770,7 @@ class ServeEngine:
         self._m["prefills"].inc()
         self._m["prefill_reqs"].inc(b)
         if tr:
-            pad_frac = 1.0 - sum(tok_lens) / float(b * pad_to)
+            pad_frac = 1.0 - sum(feed) / float(b * pad_to)
             self._m["pad_frac"].observe(pad_frac)
             self.tracer.span("prefill", t_pf, n_reqs=b, pad_to=pad_to,
                              pad_fraction=round(pad_frac, 4),
@@ -511,106 +779,194 @@ class ServeEngine:
         first = self._sample(logits, temps)
         t_first = self.tracer.now() if tr else 0.0
         for i, req in enumerate(reqs):
-            tok = int(first[i])
-            req.out_tokens.append(tok)
+            full_fed = feed[i] == tok_lens[i]
             if tr:
-                tq = self._t_enq.get(id(req))
-                if tq is not None:
-                    self._m["ttft"].observe(t_first - tq)
-                self.tracer.event("admit", rid=req.rid, plen=int(plens[i]))
-            # the prefill-sampled token can already satisfy the request
-            if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                self._outcome("completed")
-                self.tracer.event("finish", rid=req.rid, n_tokens=1)
-                self._t_enq.pop(id(req), None)
-                continue
+                self.tracer.event("admit", rid=req.rid, plen=int(plens[i]),
+                                  chunked=not full_fed)
+            if full_fed:
+                tok = int(first[i])
+                req.out_tokens.append(tok)
+                if req.on_token is not None:
+                    req.on_token(req, tok)
+                self.events.append({"kind": "token", "rid": req.rid,
+                                    "token": tok})
+                if tr:
+                    tq = self._t_enq.get(id(req))
+                    if tq is not None:
+                        self._m["ttft"].observe(t_first - tq)
+                # the prefill-sampled token can already satisfy the request
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    self._outcome(req, "completed")
+                    self.tracer.event("finish", rid=req.rid, n_tokens=1)
+                    self.events.append({"kind": "finish", "rid": req.rid,
+                                        "outcome": "completed"})
+                    self._t_enq.pop(id(req), None)
+                    continue
             slot = self._free_slot()
             self.caches = self._write(self.caches, pre,
                                       jnp.int32(i), jnp.int32(slot))
             self.pos[slot] = plens[i]
-            self.last_token[slot, 0] = tok
+            self._pf_next[slot] = feed[i]
             self.active[slot] = req
             self._last_tok_t[slot] = t_first
+            if full_fed:
+                self.last_token[slot, 0] = tok
+            self._maybe_snapshot(slot, req)
 
     # --------------------------------------------------------------- decode
     def step(self):
-        """One decode step for all active slots — exactly one jitted call
-        per engine step, however ragged the slot positions are: ``pos`` is
-        the per-slot position vector and ``active`` masks free slots, whose
-        cache regions are structurally never written by the model.  The
-        program samples in-graph and returns ``[B]`` token ids; the cache
-        argument is donated (no per-step double-buffer).
-
-        With speculation configured (``spec_depth``) and at least one
-        eligible row, the step runs a draft/verify round instead
-        (:meth:`_spec_round`) — with no eligible rows the plain path below
-        runs byte-identically to a spec-less engine."""
-        if self.spec_depth is not None:
-            rows = self._spec_rows()
-            if rows.any():
-                return self._spec_round(rows)
+        """One engine step for all active slots — exactly **one** jitted
+        scoring call however mixed the batch is.  Each row brings a
+        per-step token quota: 1 for a decoding row, up to ``chunk_len``
+        prompt tokens for a prefilling row, and ``spec_len + 1``
+        (last token + the drafted tokens, gated on greedy agreement) for
+        a speculative verify row — PR 9's sequential verify loop scored
+        these one call per position.  The scan masks each row inactive
+        past its quota (§6: masked rows never write cache), so per-row
+        results are independent of the padded scan length and of what
+        the other rows are doing — the bit-identity argument of
+        DESIGN.md §12.  Sampling runs in-graph; the cache argument is
+        donated (no per-step double-buffer)."""
         act = np.array([r is not None for r in self.active])
         if not act.any():
             return
         tr = obs.enabled()
         t_step = self.tracer.now() if tr else 0.0
+        d = self.spec_len
+        spec_rows = np.zeros(self.slots, bool)
+        dtoks = None
+        if self.spec_depth is not None:
+            spec_rows = self._spec_rows()
+            if spec_rows.any():
+                from repro.core.backend import use_spec_depth
+                with self._scope(), use_spec_depth(self.spec_depth):
+                    dtoks = np.asarray(self._draft(
+                        self.params, jnp.asarray(self.last_token),
+                        self.caches, jnp.asarray(self.pos),
+                        jnp.asarray(spec_rows)))
+                self._m["spec_rounds"].inc()
+                self._m["spec_draft_tokens"].inc(d * int(spec_rows.sum()))
+        # per-row work plan, fixed BEFORE any bookkeeping mutates
+        quota = np.zeros(self.slots, np.int32)
+        gated = np.zeros(self.slots, bool)
+        prefilling = np.zeros(self.slots, bool)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            if self._prefilling(i):
+                prefilling[i] = True
+                quota[i] = min(len(r.prompt) - int(self._pf_next[i]),
+                               self._c)
+            elif spec_rows[i]:
+                quota[i] = d + 1
+                gated[i] = True
+            else:
+                quota[i] = 1
+        k = 1 << (int(quota.max()) - 1).bit_length()
+        toks = np.zeros((self.slots, k), np.int32)
+        for i in np.flatnonzero(act):
+            if prefilling[i]:
+                pf = int(self._pf_next[i])
+                toks[i, :quota[i]] = \
+                    self.active[i].prompt[pf:pf + int(quota[i])]
+            else:
+                toks[i, 0] = self.last_token[i, 0]
+                if gated[i]:
+                    toks[i, 1:d + 1] = dtoks[:, i]
         temps = np.array([r.temperature if r is not None else 0.0
                           for r in self.active], np.float32)
         self.key, sub = jax.random.split(self.key)
+        t_call = self.tracer.now() if tr else 0.0
         with self._scope():
-            toks, self.caches = self._decode(
-                self.params, jnp.asarray(self.last_token), self.caches,
-                jnp.asarray(self.pos), jnp.asarray(act),
+            emitted, live, self.caches = self._chunk(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.pos), jnp.asarray(quota),
+                jnp.asarray(gated), jnp.asarray(act),
                 jnp.asarray(temps), sub)
         self._m["decode_steps"].inc()
-        toks = np.asarray(toks)
+        emitted = np.asarray(emitted)                          # [K, B]
+        live = np.asarray(live)                                # [K, B]
+        if spec_rows.any():
+            self._m["spec_verify_steps"].inc(
+                int(live[:, spec_rows].any(axis=1).sum()))
+            if tr:
+                self._m["spec_verify_s"].observe(
+                    self.tracer.now() - t_call)
         if tr:
             occ = float(act.mean())
             self._m["occupancy"].observe(occ)
             self._m["padded"].observe(1.0 - occ)
+            self._g_pages.set(int(np.sum(
+                -(-self.pos[act] // self.page_tokens))))
         t_tok = self.tracer.now() if tr else 0.0
+        accepted = np.zeros(self.slots, np.int64)
         for i in np.flatnonzero(act):
             req = self.active[i]
-            tok = int(toks[i])
-            req.out_tokens.append(tok)
-            self._m["tokens"].inc()
+            q = int(quota[i])
+            if prefilling[i]:
+                self._pf_next[i] += q
+                self.pos[i] += q
+                self._maybe_snapshot(i, req)
+                if int(self._pf_next[i]) >= len(req.prompt):
+                    # the final chunk step's logits ARE the first-token
+                    # logits — same position the one-shot path samples
+                    tok = int(emitted[q - 1, i])
+                    self._emit(req, i, tok, t_tok, first=True)
+                    if (req.eos_id is not None and tok == req.eos_id) or \
+                            len(req.out_tokens) >= req.max_new_tokens:
+                        self._finish(req, i)
+                    else:
+                        self.last_token[i, 0] = tok
+                continue
+            for v in range(q):
+                if not live[v, i]:
+                    break
+                tok = int(emitted[v, i])
+                self._emit(req, i, tok, t_tok)
+                self.pos[i] += 1
+                self.last_token[i, 0] = tok
+                matched = bool(gated[i]) and v < d \
+                    and tok == int(dtoks[v, i])
+                if matched:
+                    accepted[i] += 1
+                # pos is the *next* write index; retire once it passes the
+                # last valid cache slot s_max-1 (matches the admission
+                # bound plen < s_max)
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens or \
+                        self.pos[i] >= self.s_max:
+                    self._finish(req, i)
+                    break
+                if gated[i] and not matched:
+                    # the correction token was already emitted above;
+                    # nothing to rewind (unverified draft KV was only
+                    # written past this row's final pos — never read)
+                    break
+        for i in np.flatnonzero(spec_rows):
+            self._m["spec_accepted"].inc(int(accepted[i]))
+            self._m["spec_rolled_back"].inc(d - int(accepted[i]))
             if tr:
-                self._m["itl"].observe(t_tok - self._last_tok_t[i])
-                self._last_tok_t[i] = t_tok
-                self.tracer.event("token", rid=req.rid, slot=int(i),
-                                  pos=int(self.pos[i]))
-            self.pos[i] += 1
-            self.last_token[i, 0] = tok
-            # pos is the *next* write index; retire once it passes the last
-            # valid cache slot s_max-1 (matches the add_request admission
-            # bound plen < s_max)
-            if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(req.out_tokens) >= req.max_new_tokens or \
-                    self.pos[i] >= self.s_max:
-                req.done = True
-                self._outcome("completed")
-                self.tracer.event("finish", rid=req.rid,
-                                  n_tokens=len(req.out_tokens))
-                self._t_enq.pop(id(req), None)
-                self.active[i] = None
-                # park the freed row at 0 so inactive rows are in-bounds by
-                # construction, not by JAX's OOB scatter-drop semantics
-                self.pos[i] = 0
+                self._m["spec_accept_frac"].observe(accepted[i] / d)
         if tr:
             self.tracer.span("decode_step", t_step,
-                             active=int(act.sum()), slots=self.slots)
+                             active=int(act.sum()), slots=self.slots,
+                             chunk=int(k),
+                             prefilling=int(prefilling.sum()))
 
     # ------------------------------------------------- speculative decode
     def _spec_rows(self) -> np.ndarray:
-        """Rows eligible to draft this round: active, opted in, greedy
-        (temperature 0 — stochastic rows cannot be verified by argmax),
-        at least 2 tokens still wanted (a 1-token round gains nothing over
-        a plain step), and enough cache ring left for full acceptance."""
+        """Rows eligible to draft this round: active, fully prefilled,
+        opted in, greedy (temperature 0 — stochastic rows cannot be
+        verified by argmax), at least 2 tokens still wanted (a 1-token
+        round gains nothing over a plain step), and enough cache ring
+        left for full acceptance."""
         ok = np.zeros(self.slots, bool)
         for i, r in enumerate(self.active):
             if r is None or not r.spec or r.temperature != 0.0:
+                continue
+            if self._prefilling(i):
                 continue
             if r.max_new_tokens - len(r.out_tokens) < 2:
                 continue
@@ -618,93 +974,6 @@ class ServeEngine:
                 continue
             ok[i] = True
         return ok
-
-    def _spec_round(self, spec_rows: np.ndarray):
-        """One draft/verify round (DESIGN.md §11).
-
-        Draft: ``spec_len`` greedy decode steps at truncated plane depth
-        (``use_spec_depth``) on a throwaway cache view.  Verify: a short
-        loop of the same jitted full-precision ragged decode the plain
-        path uses.  Every emitted token comes from a full-precision step
-        whose entire context is already verified — the draft tokens are
-        never emitted, they only decide whether a row *continues* to the
-        next verify step (its draft matched, so the draft's next input
-        was right).  Hence accepted output is bit-identical to
-        sequential greedy decode, and a mismatch needs no device
-        rollback: the mismatching row just stops participating, and the
-        correction token's KV is written by the next round's first step.
-        Non-spec active rows ride along in verify step 0 only — one
-        ordinary token per round, same numerics as the plain path."""
-        from repro.core.backend import use_spec_depth
-        act = np.array([r is not None for r in self.active])
-        d = self.spec_len
-        tr = obs.enabled()
-        t_step = self.tracer.now() if tr else 0.0
-        with self._scope(), use_spec_depth(self.spec_depth):
-            dtoks = np.asarray(self._draft(
-                self.params, jnp.asarray(self.last_token), self.caches,
-                jnp.asarray(self.pos), jnp.asarray(spec_rows)))
-        self._m["spec_rounds"].inc()
-        self._m["spec_draft_tokens"].inc(d * int(spec_rows.sum()))
-        temps = np.array([r.temperature if r is not None else 0.0
-                          for r in self.active], np.float32)
-        alive = act.copy()
-        accepted = np.zeros(self.slots, np.int64)
-        for v in range(d + 1):
-            self.key, sub = jax.random.split(self.key)
-            with self._scope():
-                toks, self.caches = self._decode(
-                    self.params, jnp.asarray(self.last_token), self.caches,
-                    jnp.asarray(self.pos), jnp.asarray(alive),
-                    jnp.asarray(temps), sub)
-            self._m["decode_steps"].inc()
-            self._m["spec_verify_steps"].inc()
-            toks = np.asarray(toks)
-            t_tok = self.tracer.now() if tr else 0.0
-            for i in np.flatnonzero(alive):
-                req = self.active[i]
-                tok = int(toks[i])
-                req.out_tokens.append(tok)
-                self._m["tokens"].inc()
-                if tr:
-                    self._m["itl"].observe(t_tok - self._last_tok_t[i])
-                    self._last_tok_t[i] = t_tok
-                    self.tracer.event("token", rid=req.rid, slot=int(i),
-                                      pos=int(self.pos[i]))
-                self.pos[i] += 1
-                self.last_token[i, 0] = tok
-                matched = bool(spec_rows[i]) and v < d \
-                    and tok == int(dtoks[v, i])
-                if matched:
-                    accepted[i] += 1
-                if (req.eos_id is not None and tok == req.eos_id) or \
-                        len(req.out_tokens) >= req.max_new_tokens or \
-                        self.pos[i] >= self.s_max:
-                    req.done = True
-                    self._outcome("completed")
-                    self.tracer.event("finish", rid=req.rid,
-                                      n_tokens=len(req.out_tokens))
-                    self._t_enq.pop(id(req), None)
-                    self.active[i] = None
-                    self.pos[i] = 0       # park freed row in-bounds
-                    alive[i] = False
-                elif not matched:
-                    # non-spec rows take exactly one step per round; a
-                    # mismatched spec row already emitted its correction
-                    # token above — nothing to rewind
-                    alive[i] = False
-            if not alive.any():
-                break
-        for i in np.flatnonzero(spec_rows):
-            self._m["spec_accepted"].inc(int(accepted[i]))
-            self._m["spec_rolled_back"].inc(d - int(accepted[i]))
-            if tr:
-                self._m["spec_accept_frac"].observe(accepted[i] / d)
-        if tr:
-            self.tracer.span("spec_round", t_step,
-                             active=int(act.sum()), slots=self.slots,
-                             drafted=d * int(spec_rows.sum()),
-                             accepted=int(accepted.sum()))
 
     def _sample(self, logits, temperatures) -> np.ndarray:
         """Host-side batched sampling: greedy where ``temperatures[i] ==
@@ -724,69 +993,250 @@ class ServeEngine:
             axis=-1)
         return np.asarray(jnp.where(t > 0, sampled, greedy), dtype=np.int32)
 
-    def run(self, requests: List[Request], max_steps: int = 1000) -> Dict:
-        """Drive ``requests`` to completion (or ``max_steps``).  Each loop
-        iteration admits every fittable pending request the free slots
-        allow — one batched prefill per drain window — then decodes one
-        step.  Stats split ``completed`` (reached eos/max_new_tokens/cache
-        end), ``evicted`` (cut off at ``max_steps`` with partial output),
-        ``rejected`` (prompt cannot fit the cache — skipped, the rest of
-        the batch keeps running) and ``unserved`` (never admitted); the
-        four always sum to ``len(requests)``.
+    # ------------------------------------------------------- prefix cache
+    def _init_prefix(self, prefix_pages, prefix_entries: int) -> None:
+        """Build the device half of the prefix cache: a page-pool pytree
+        (one pool leaf per *paged* cache leaf, ``n_pages`` rows of
+        ``page_tokens`` positions) plus a side slab holding whole rows of
+        the non-paged leaves (rings, recurrent state) at each snapshot
+        boundary, and the jitted snapshot/restore copy programs.  Cache
+        families whose leaves cannot be classified (a sequence dim that
+        does not scale 1:1 with ``s_max``) silently serve without reuse —
+        correctness never depends on the cache."""
+        from repro.serve.paged import PageAllocator, PrefixIndex
+        api, P_ = self.api, self.page_tokens
+        try:
+            sdims, ok = self._classify_cache_leaves()
+        except Exception:  # smelint: disable=EXC001 — probe over arbitrary arch cache builders: any classification failure means "serve without reuse", never abort serving
+            ok = False
+        if not ok:
+            return
+        n_pages = int(prefix_pages) if prefix_pages else 4 * self._max_pages
+        self._pool = jax.jit(
+            lambda: api.init_cache(batch=n_pages, s_max=P_),
+            out_shardings=self._rep)()
+        self._side = jax.jit(
+            lambda: api.init_cache(batch=prefix_entries, s_max=P_),
+            out_shardings=self._rep)()
+        bdims = self._cache_bdim
 
-        The returned counts are **derived from the metrics registry**
-        (DESIGN.md §9): every outcome increments this engine's
-        ``serve_requests_total{outcome=...}`` child as it happens, and
-        the dict reports the deltas over this call — one source of
-        truth, same shape as before."""
+        def snap_fn(pool, side, caches, slot, ids, first_new, n, entry):
+            # pages [first_new, n) of the slot row -> pool rows ids[j];
+            # the chain prefix [0, first_new) is already resident
+            def per_pool(pl, cl, bd, sd):
+                if sd < 0:
+                    return pl
+                row = jax.lax.dynamic_slice_in_dim(cl, slot, 1, axis=bd)
+
+                def body(j, acc):
+                    src = jax.lax.dynamic_slice_in_dim(
+                        row, j * P_, P_, axis=sd)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        acc, src.astype(acc.dtype), ids[j], axis=bd)
+                return jax.lax.fori_loop(first_new, n, body, pl)
+
+            def per_side(sl, cl, bd, sd):
+                if sd >= 0:
+                    return sl
+                row = jax.lax.dynamic_slice_in_dim(cl, slot, 1, axis=bd)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    sl, row.astype(sl.dtype), entry, axis=bd)
+
+            return (jax.tree.map(per_pool, pool, caches, bdims, sdims),
+                    jax.tree.map(per_side, side, caches, bdims, sdims))
+
+        self._snap = jax.jit(
+            snap_fn,
+            in_shardings=(self._rep, self._rep, self.cache_sh, self._rep,
+                          self._rep, self._rep, self._rep, self._rep),
+            out_shardings=(self._rep, self._rep),
+            donate_argnums=(0, 1))
+
+        def restore_fn(caches, pool, side, slot, ids, n, entry):
+            def per_leaf(cl, pl, sl, bd, sd):
+                if sd < 0:
+                    row = jax.lax.dynamic_slice_in_dim(sl, entry, 1,
+                                                       axis=bd)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        cl, row.astype(cl.dtype), slot, axis=bd)
+                row = jax.lax.dynamic_slice_in_dim(cl, slot, 1, axis=bd)
+
+                def body(j, acc):
+                    page = jax.lax.dynamic_slice_in_dim(
+                        pl, ids[j], 1, axis=bd)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        acc, page.astype(acc.dtype), j * P_, axis=sd)
+                row = jax.lax.fori_loop(0, n, body, row)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    cl, row, slot, axis=bd)
+            return jax.tree.map(per_leaf, caches, pool, side, bdims, sdims)
+
+        self._restore = jax.jit(
+            restore_fn,
+            in_shardings=(self.cache_sh, self._rep, self._rep, self._rep,
+                          self._rep, self._rep, self._rep),
+            out_shardings=self.cache_sh,
+            donate_argnums=(0,))
+        self._prefix_sdims = sdims
+        self._prefix = PrefixIndex(PageAllocator(n_pages), prefix_entries,
+                                   P_)
+
+    def _classify_cache_leaves(self):
+        """Structurally split cache leaves into *paged* (exactly one
+        non-batch dim scaling 1:1 with ``s_max`` — KV rings at full
+        length) and *side* (shape independent of ``s_max`` — recurrent
+        state, windowed rings, conv tails).  Probes abstract shapes at
+        ``s_max``, ``2*s_max`` and ``page_tokens``; any leaf fitting
+        neither pattern disables the prefix cache for this family."""
+        P_ = self.page_tokens
+        a1 = self.api.abstract_cache(batch=self.slots, s_max=self.s_max)
+        a2 = self.api.abstract_cache(batch=self.slots, s_max=2 * self.s_max)
+        ap = self.api.abstract_cache(batch=self.slots, s_max=P_)
+        ok = [True]
+
+        def one(l1, l2, lp, bd):
+            diffs = [dd for dd in range(l1.ndim)
+                     if l1.shape[dd] != l2.shape[dd]]
+            if not diffs:
+                if lp.shape != l1.shape:
+                    ok[0] = False
+                return -1
+            if len(diffs) != 1:
+                ok[0] = False
+                return -1
+            dd = diffs[0]
+            if dd == bd or l1.shape[dd] != self.s_max \
+                    or l2.shape[dd] != 2 * self.s_max \
+                    or lp.shape[dd] != P_:
+                ok[0] = False
+                return -1
+            return dd
+
+        sdims = jax.tree.map(one, a1, a2, ap, self._cache_bdim)
+        return sdims, ok[0]
+
+    def _prefix_lookup(self, req: Request):
+        """Longest token-id-exact snapshot usable for this prompt (at
+        least one prompt token is always left to recompute so the
+        first-token logits exist)."""
+        ent = self._prefix.lookup(np.asarray(req.prompt, np.int32),
+                                  len(req.prompt) - 1)
+        self._m["prefix_hits" if ent is not None else
+                "prefix_misses"].inc()
+        return ent
+
+    def _restore_entry(self, req: Request, ent) -> None:
+        """Admit a prefix-cache hit: copy the snapshot's pages + side row
+        into a free slot and resume prefilling at ``ent.length``.  The
+        snapshot is the deterministic chunk-schedule state of exactly
+        these token ids, so the restored request's tokens are
+        bit-identical to a cold admission (DESIGN.md §12)."""
+        slot = self._free_slot()
+        ids = np.zeros(self._max_pages, np.int32)
+        n = len(ent.page_ids)
+        ids[:n] = ent.page_ids
+        tr = obs.enabled()
+        t0 = self.tracer.now() if tr else 0.0
+        if tr:
+            tq = self._t_enq.get(id(req))
+            if tq is not None:
+                self._m["qwait"].observe(t0 - tq)
+        with self._scope():
+            self.caches = self._restore(
+                self.caches, self._pool, self._side, jnp.int32(slot),
+                jnp.asarray(ids), jnp.int32(n), jnp.int32(ent.entry_slot))
+        self.pos[slot] = ent.length
+        self._pf_next[slot] = ent.length
+        self.active[slot] = req
+        self._last_tok_t[slot] = self.tracer.now() if tr else 0.0
+        self.tracer.event("restore", rid=req.rid, plen=int(ent.length),
+                          pages=n)
+
+    def _maybe_snapshot(self, slot: int, req: Request) -> None:
+        """Snapshot the slot's cache row at a chunk boundary (``pf_next``
+        a positive multiple of the one-shot budget — page-aligned by the
+        constructor check).  Safe to call for just-finished rows: the
+        device cache row is intact until the slot is rewritten."""
+        if self._prefix is None:
+            return
+        L = int(self._pf_next[slot])
+        if L <= 0 or L % self._c or L % self.page_tokens:
+            return
+        toks = np.asarray(req.prompt[:L], np.int32)
+        if self._prefix.has(toks):
+            return
+        ev0 = self._prefix.evictions
+        plan = self._prefix.prepare(toks)
+        self._m["prefix_evictions"].inc(self._prefix.evictions - ev0)
+        if plan is None:
+            return
+        ids = np.zeros(self._max_pages, np.int32)
+        n = len(plan.entry.page_ids)
+        ids[:n] = plan.entry.page_ids
+        with self._scope():
+            self._pool, self._side = self._snap(
+                self._pool, self._side, self.caches, jnp.int32(slot),
+                jnp.asarray(ids), jnp.int32(plan.first_new), jnp.int32(n),
+                jnp.int32(plan.entry.entry_slot))
+        self._prefix.commit(plan)
+        self._m["prefix_snapshots"].inc()
+        self._g_pool.set(self._prefix.alloc.in_use)
+        self._g_entries.set(len(self._prefix))
+        self.tracer.event("snapshot", rid=req.rid, plen=L,
+                          new_pages=n - plan.first_new)
+
+    # ------------------------------------------------------------------ run
+    def run(self, requests: List[Request], max_steps: int = 1000) -> Dict:
+        """Drive ``requests`` to completion (or ``max_steps``) through the
+        open-stream path: every request is :meth:`submit`-ted, then each
+        loop iteration :meth:`pump`-s the queue (one batched prefill per
+        drain window) and runs one engine :meth:`step`.  Stats split
+        ``completed`` (reached eos/max_new_tokens/cache end), ``evicted``
+        (cut off at ``max_steps`` with partial output), ``rejected``
+        (prompt cannot fit the cache — skipped, the rest of the batch
+        keeps running) and ``unserved`` (never admitted); the four always
+        sum to ``len(requests)``.
+
+        Every outcome increments this engine's
+        ``serve_requests_total{outcome=...}`` child the moment it happens
+        AND stamps ``Request.outcome`` (DESIGN.md §9/§12): the returned
+        split is computed from **this call's requests**, so it stays
+        correct when other submitters' requests reach their outcomes
+        between this run's steps (registry deltas no longer assume the
+        engine serves one closed batch at a time)."""
         t0 = time.time()
-        base = {o: self._outcome_count(o)
-                for o in ("completed", "evicted", "rejected", "unserved")}
+        mine = {id(r) for r in requests}
         for r in requests:
-            self._mark_enqueue(r)
-        pending = list(requests)
-        rejected_ids = set()
+            self.submit(r)
         steps = 0
-        while (pending or any(self.active)) and steps < max_steps:
-            # drain: fill every free slot, one padded prefill per window
-            # (enc-dec prefills per request); requests completed by their
-            # prefill-sampled token free their slot for the same drain
-            while pending:
-                free = len(self._free_slots())
-                cap = free if self._ragged_prefill else min(1, free)
-                window = []
-                while pending and len(window) < cap:
-                    try:
-                        self._prefill_len(pending[0])
-                    except PromptTooLong:
-                        req = pending.pop(0)
-                        rejected_ids.add(id(req))
-                        self._reject(req)
-                        continue
-                    window.append(pending.pop(0))
-                if not window:
-                    break
-                self._admit(window)
+        while (self._queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            self.pump()
             self.step()
             steps += 1
         # cutoff classification: anything not completed/rejected by now is
         # evicted (partial output) or unserved (never admitted)
         for r in requests:
-            if r.done or id(r) in rejected_ids:
+            if r.done or r.outcome is not None:
                 continue
             if r.out_tokens:
-                self._outcome("evicted")
+                self._outcome(r, "evicted")
                 self.tracer.event("evict", rid=r.rid,
                                   n_tokens=len(r.out_tokens))
             else:
-                self._outcome("unserved")
+                self._outcome(r, "unserved")
             self._t_enq.pop(id(r), None)
-        return {
-            **{o: self._outcome_count(o) - base[o]
-               for o in ("completed", "evicted", "rejected", "unserved")},
-            "wall_s": time.time() - t0,
-            **self._stats,
-        }
+        if self._queue:
+            # drop this run's unserved leftovers; foreign requests stay
+            self._queue = collections.deque(
+                q for q in self._queue if id(q) not in mine)
+            self._g_queue.set(len(self._queue))
+        counts = {o: 0 for o in ("completed", "evicted", "rejected",
+                                 "unserved")}
+        for r in requests:
+            if r.outcome in counts:
+                counts[r.outcome] += 1
+        return {**counts, "wall_s": time.time() - t0, **self._stats}
 
 
 def _slot_write(full, one, slot: int):

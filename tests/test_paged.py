@@ -1,0 +1,214 @@
+"""Paged KV accounting + prefix cache (DESIGN.md §12).
+
+Host-side half first: the allocator may never hand out a page whose
+refcount is nonzero (recycling cannot alias a live page), prefix chains
+share pages refcounted, lookup is token-id-exact (a near-miss prefix
+must not reuse pages), LRU eviction only recycles pages no surviving
+entry references, and every failed reservation rolls back cleanly.
+
+Engine half: a warm prefix-cache hit must emit tokens bit-identical to
+the cold run — restored device state equals recomputation because the
+chunk schedule over a shared prefix is deterministic — and a prompt
+differing inside the cached prefix must miss.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.serve import (PageAllocator, PrefixIndex, Request, ServeEngine)
+from repro.serve.paged import _digest
+
+RNG = jax.random.key(0)
+
+
+def _toks(*ids):
+    return np.asarray(ids, np.int32)
+
+
+# ---------------------------------------------------------- PageAllocator
+def test_alloc_never_hands_out_live_pages():
+    al = PageAllocator(4)
+    live = [al.alloc() for _ in range(4)]
+    assert sorted(live) == [0, 1, 2, 3] and al.alloc() is None
+    al.retain(live[1])
+    al.release(live[1])                 # refcount 2 -> 1: still live
+    assert al.alloc() is None, "page with a live reference was recycled"
+    al.release(live[2])                 # 1 -> 0: recyclable
+    got = al.alloc()
+    assert got == live[2] and al.refcount(got) == 1
+    # exhaustive invariant: every alloc() result had refcount 0 just before
+    al2 = PageAllocator(3)
+    held = []
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        if held and rng.random() < 0.5:
+            al2.release(held.pop(rng.integers(len(held))))
+        else:
+            p = al2.alloc()
+            if p is not None:
+                assert p not in held, f"alloc aliased live page {p}"
+                held.append(p)
+    assert al2.in_use == len(held)
+
+
+def test_release_underflow_raises():
+    al = PageAllocator(1)
+    p = al.alloc()
+    al.release(p)
+    with pytest.raises((ValueError, KeyError)):
+        al.release(p)
+
+
+# ------------------------------------------------------------ PrefixIndex
+def _index(n_pages=8, n_entries=4, page_tokens=2):
+    return PrefixIndex(PageAllocator(n_pages), n_entries, page_tokens)
+
+
+def test_chain_sharing_refcounts_and_first_new():
+    ix = _index()
+    a = ix.prepare(_toks(1, 2, 3, 4))           # pages for [1,2], [1..4]
+    assert a is not None and a.first_new == 0 and len(a.entry.page_ids) == 2
+    ix.commit(a)
+    b = ix.prepare(_toks(1, 2, 9, 9))           # shares page 0, diverges
+    assert b is not None
+    assert b.entry.page_ids[0] == a.entry.page_ids[0]
+    assert b.entry.page_ids[1] != a.entry.page_ids[1]
+    assert b.first_new == 1
+    assert ix.alloc.refcount(a.entry.page_ids[0]) == 2
+    ix.commit(b)
+    # an identical prefix is already cached -> no new reservation
+    assert ix.prepare(_toks(1, 2, 3, 4)) is None
+
+
+def test_lookup_token_id_exact_and_longest():
+    ix = _index()
+    for pre in (_toks(1, 2), _toks(1, 2, 3, 4)):
+        plan = ix.prepare(pre)
+        ix.commit(plan)
+    prompt = _toks(1, 2, 3, 4, 5, 6)
+    hit = ix.lookup(prompt, len(prompt) - 1)
+    assert hit is not None and hit.length == 4      # longest wins
+    assert ix.lookup(prompt, 3).length == 2         # max_len caps it
+    # near miss: same length, one token id different, must NOT reuse
+    assert ix.lookup(_toks(1, 2, 3, 7, 5, 6), 5).length == 2
+    assert ix.lookup(_toks(9, 2, 3, 4, 5, 6), 5) is None
+    assert ix.hits == 3 and ix.misses == 1
+
+
+def test_near_miss_with_forged_digest_collision_rejected():
+    """Exactness is not delegated to the hash: even if two prefixes
+    digest-collided, the stored-token comparison rejects the reuse."""
+    ix = _index()
+    plan = ix.prepare(_toks(1, 2))
+    ix.commit(plan)
+    ent = ix._entries[_digest(_toks(1, 2))]
+    # simulate a collision: entry reachable under the prompt's digest
+    ix._entries[_digest(_toks(3, 4))] = ent
+    assert ix.lookup(_toks(3, 4, 5), 2) is None
+
+
+def test_lru_eviction_recycles_only_unreferenced_pages():
+    ix = _index(n_pages=4, n_entries=4, page_tokens=2)
+    a = ix.prepare(_toks(1, 2, 3, 4))       # 2 pages
+    ix.commit(a)
+    b = ix.prepare(_toks(1, 2, 5, 6))       # shares page 0 (refcount 2)
+    ix.commit(b)
+    assert ix.alloc.in_use == 3
+    ix.lookup(_toks(1, 2, 3, 4, 9), 4)      # bump a: b becomes LRU
+    c = ix.prepare(_toks(7, 8, 9, 10))      # needs 2 pages, 1 free -> evict b
+    assert c is not None and ix.evictions == 1
+    ix.commit(c)
+    # a's chain survived the eviction intact (shared page 0 kept live)
+    assert ix.lookup(_toks(1, 2, 3, 4, 9), 4) is not None
+    assert ix.alloc.refcount(a.entry.page_ids[0]) == 1
+
+
+def test_prepare_rollback_on_exhaustion():
+    # pages held outside the index cannot be evicted away
+    al = PageAllocator(3)
+    pinned = al.alloc()
+    ix = PrefixIndex(al, 4, 2)
+    before = al.in_use
+    assert ix.prepare(_toks(1, 2, 3, 4, 5, 6)) is None   # needs 3, has 2
+    assert al.in_use == before, "failed prepare leaked page references"
+    ok = ix.prepare(_toks(1, 2, 3, 4))                   # needs 2: fits
+    assert ok is not None
+    ix.abort(ok)
+    assert al.in_use == before and not ix.has(_toks(1, 2, 3, 4))
+    al.release(pinned)
+
+
+def test_snapshot_length_validation():
+    ix = _index(page_tokens=4)
+    with pytest.raises(ValueError, match="multiple"):
+        ix.prepare(_toks(1, 2, 3))
+    with pytest.raises(ValueError, match="multiple"):
+        ix.prepare(np.zeros(0, np.int32))
+
+
+# ------------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def qwen():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = get_smoke("qwen1.5-0.5b")
+    api = build_model(cfg)
+    return cfg, api, api.init_params(RNG)
+
+
+def _run_one(api, params, prompt, **kw):
+    eng = ServeEngine(api, params, **kw)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    eng.run([req], max_steps=60)
+    assert req.done
+    return eng, req.out_tokens
+
+
+def test_engine_prefix_hit_bit_identical(qwen):
+    cfg, api, params = qwen
+    kw = dict(slots=2, s_max=32, chunk_len=8, page_tokens=8,
+              prefix_cache=True)
+    shared = np.arange(16, dtype=np.int32)
+    pa = np.concatenate([shared, _toks(1, 2, 3, 4)])
+    pb = np.concatenate([shared, _toks(5, 6, 7, 8)])
+
+    cold_eng, cold_b = _run_one(api, params, pb, **kw)
+    assert cold_eng._m["prefix_hits"].value == 0
+
+    warm = ServeEngine(api, params, **kw)
+    ra = Request(rid=0, prompt=pa, max_new_tokens=4)
+    warm.run([ra], max_steps=60)
+    assert warm._m["prefix_snapshots"].value >= 1, \
+        "chunk-aligned prefixes were never snapshotted"
+    rb = Request(rid=1, prompt=pb, max_new_tokens=4)
+    warm.run([rb], max_steps=60)
+    assert warm._m["prefix_hits"].value >= 1, "warm prompt missed the cache"
+    assert rb.out_tokens == cold_b, (
+        f"prefix restore changed tokens: warm={rb.out_tokens} "
+        f"cold={cold_b}")
+
+
+def test_engine_prefix_near_miss_no_reuse(qwen):
+    cfg, api, params = qwen
+    kw = dict(slots=2, s_max=32, chunk_len=8, page_tokens=8,
+              prefix_cache=True)
+    pa = np.arange(20, dtype=np.int32)
+    near = pa.copy()
+    near[3] ^= 1                       # inside the first cached page
+    _, cold = _run_one(api, params, near, **kw)
+
+    warm = ServeEngine(api, params, **kw)
+    warm.run([Request(rid=0, prompt=pa, max_new_tokens=4)], max_steps=60)
+    hits0 = warm._m["prefix_hits"].value
+    rn = Request(rid=1, prompt=near, max_new_tokens=4)
+    warm.run([rn], max_steps=60)
+    assert warm._m["prefix_hits"].value == hits0, \
+        "near-miss prefix reused cached pages"
+    assert rn.out_tokens == cold
+
+
+def test_engine_prefix_requires_page_aligned_chunks(qwen):
+    cfg, api, params = qwen
+    with pytest.raises(ValueError, match="page_tokens"):
+        ServeEngine(api, params, slots=1, s_max=32, chunk_len=8,
+                    page_tokens=5, prefix_cache=True)

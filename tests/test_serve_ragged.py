@@ -343,6 +343,107 @@ def test_moe_capacity_invariant_to_prompt_bucket():
             f"ragged={ragged[ref.rid].out_tokens} solo={ref.out_tokens}")
 
 
+class _InterleaveProperty:
+    """The §12 open-stream property, shared by the deterministic fuzz
+    test and the hypothesis variant: any interleaving of submissions,
+    engine steps and preemptions emits, per request, exactly the
+    solo-run tokens at the same geometry — admission order and
+    preemption timing must not leak into the output."""
+
+    def __init__(self):
+        self.cfg = get_smoke("qwen1.5-0.5b")
+        self.api = build_model(self.cfg)
+        self.params = self.api.init_params(RNG)
+        self.kw = dict(slots=2, s_max=32, chunk_len=4)
+        self._solo = {}
+
+    def mk(self, seed):
+        rng = np.random.default_rng(seed)
+        lens = (9, 4, 11)                 # mixed one-shot vs chunked
+        return [Request(rid=i,
+                        prompt=rng.integers(0, self.cfg.vocab,
+                                            size=lens[i], dtype=np.int32),
+                        max_new_tokens=2 + i)
+                for i in range(3)]
+
+    def solo(self, seed):
+        if seed not in self._solo:
+            outs = []
+            for ref in self.mk(seed):
+                eng = ServeEngine(self.api, self.params, **self.kw)
+                eng.run([ref], max_steps=80)
+                assert ref.done
+                outs.append(ref.out_tokens)
+            self._solo[seed] = outs
+        return self._solo[seed]
+
+    def check(self, seed, sched):
+        reqs = self.mk(seed)
+        pending = list(reqs)
+        eng = ServeEngine(self.api, self.params, **self.kw)
+        preempted = 0
+        for op in sched:
+            if op == 5 and pending:
+                eng.submit(pending.pop(0))
+            elif op == 4:
+                # preempt whatever row happens to be preemptible (the
+                # engine refuses rows that already emitted tokens)
+                for i, r in enumerate(eng.active):
+                    if r is not None and eng.preempt(i):
+                        preempted += 1
+                        break
+            else:
+                eng.pump()
+                eng.step()
+        for r in pending:                 # tail: drain to completion
+            eng.submit(r)
+        for _ in range(200):
+            if all(r.done for r in reqs):
+                break
+            eng.pump()
+            eng.step()
+        assert all(r.done for r in reqs), "stream did not drain"
+        assert preempted == eng._m["preemptions"].value
+        assert [r.out_tokens for r in reqs] == self.solo(seed), (
+            f"interleaving changed tokens (seed={seed}, sched={sched})")
+
+
+_INTERLEAVE = {}
+
+
+def _interleave_prop():
+    if "p" not in _INTERLEAVE:          # built lazily, shared across tests
+        _INTERLEAVE["p"] = _InterleaveProperty()
+    return _INTERLEAVE["p"]
+
+
+def test_interleaved_admission_and_preemption_fuzz():
+    """Deterministic fuzz over random admit/step/preempt schedules (runs
+    everywhere; the hypothesis variant below shrinks better when the
+    package is installed)."""
+    p = _interleave_prop()
+    rng = np.random.default_rng(12)
+    for case in range(4):
+        seed = case % 2
+        sched = rng.integers(0, 6, size=rng.integers(6, 24)).tolist()
+        p.check(seed, sched)
+
+
+def test_interleaved_admission_and_preemption_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    p = _interleave_prop()
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2),
+           sched=st.lists(st.integers(min_value=0, max_value=5),
+                          min_size=6, max_size=24))
+    def prop(seed, sched):
+        p.check(seed, sched)
+
+    prop()
+
+
 def test_run_stats_split_completed_evicted():
     cfg = get_smoke("qwen1.5-0.5b")
     api = build_model(cfg)
